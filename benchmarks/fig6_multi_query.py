@@ -1,0 +1,25 @@
+"""Paper Fig 6: multiple source documents at once, runtime vs v_r (query
+word count). The paper observes per-query cost growing with v_r and the
+first query paying cold-miss overhead (for us: jit compile, excluded)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import one_to_many
+from repro.data.corpus import make_corpus
+from .common import row, timeit
+
+
+def main(out=print) -> None:
+    corpus = make_corpus(vocab_size=8192, embed_dim=64, n_docs=1024,
+                         n_queries=6, words_per_doc=(19, 43), seed=1)
+    for i, q in enumerate(corpus.queries):
+        v_r = int((q > 0).sum())
+        t = timeit(lambda q=q: one_to_many(q, corpus.docs, corpus.vecs,
+                                           lam=9.0, n_iter=15, impl="sparse"),
+                   warmup=1, iters=3)
+        out(row(f"fig6.query{i}_vr{v_r}", t * 1e6, f"v_r={v_r}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.getcwd(), "experiments", "dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return cells
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if name.endswith(".json"):
+            with open(os.path.join(DRYRUN_DIR, name)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(cells, mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful | roofline-MFU | fits16G |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("skipped") or c.get("mesh") != mesh:
+            continue
+        r = c["roofline"]
+        fit = c.get("analytic_fit", {}).get("fits_16gb", "?")
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_mfu']:.3f} | {fit} |")
+    return "\n".join(rows)
+
+
+def main(out=print) -> None:
+    cells = load_cells()
+    done = [c for c in cells if not c.get("skipped")]
+    skipped = [c for c in cells if c.get("skipped")]
+    out(f"# cells analysed: {len(done)}  skipped(documented): {len(skipped)}")
+    for c in done:
+        r = c["roofline"]
+        out(f"roofline.{c['arch']}.{c['shape']}.{c['mesh']},"
+            f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+            f"dominant={r['dominant']};mfu={r['roofline_mfu']:.3f}")
+
+
+if __name__ == "__main__":
+    print(table(load_cells()))

@@ -1,0 +1,39 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (paper mapping in each module doc).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (fig5_scaling, fig6_multi_query, fig7_cdist, moe_router,
+               python_baseline, roofline, table1_profile)
+
+MODULES = [
+    ("table1_profile", table1_profile),
+    ("python_baseline", python_baseline),
+    ("fig5_scaling", fig5_scaling),
+    ("fig6_multi_query", fig6_multi_query),
+    ("fig7_cdist", fig7_cdist),
+    ("moe_router", moe_router),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in MODULES:
+        try:
+            mod.main(out=print)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Table 1: per-stage profile of the WMD pipeline.
+
+The paper profiles the python/MKL implementation and finds the dense
+``v = c.multiply(1/(K.T @ u))`` line takes 91.9% (+6.1% for the final one)
+of runtime, motivating the sparse transformation. We reproduce the stage
+split on the dense path and then measure the same stages on the sparse
+path (corpus statistics scaled to CPU: V/L work ratio preserved in spirit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sinkhorn import cdist, select_support
+from repro.core.sparse import padded_docs_to_dense
+from repro.data.corpus import make_corpus
+from .common import row, timeit
+
+V, W, N = 16384, 64, 1024
+
+
+def main(out=print) -> None:
+    corpus = make_corpus(vocab_size=V, embed_dim=W, n_docs=N, n_queries=1,
+                         words_per_doc=(19, 43), seed=0)
+    q = corpus.queries[0]
+    r, vecs_sel, _ = select_support(q, corpus.vecs)
+    vecs = jnp.asarray(corpus.vecs)
+    c = jnp.asarray(padded_docs_to_dense(corpus.docs, V))
+    lam = 9.0
+
+    # --- dense stages (paper Fig 2 lines) --------------------------------
+    f_cdist = jax.jit(lambda: cdist(vecs_sel, vecs))
+    m = f_cdist()
+    f_k = jax.jit(lambda: jnp.exp(-lam * m))
+    k = f_k()
+    u = jnp.full((r.shape[0], N), float(r.shape[0]))
+    f_sddmm_line = jax.jit(lambda u: c * (1.0 / (k.T @ u)))   # Table 1 hot line
+    v = f_sddmm_line(u)
+    k_over_r = k / r[:, None]
+    f_spmm_line = jax.jit(lambda v: k_over_r @ v)
+
+    t_cdist = timeit(f_cdist)
+    t_k = timeit(f_k)
+    t_hot = timeit(f_sddmm_line, u)
+    t_spmm = timeit(f_spmm_line, v)
+    tot = t_cdist + t_k + 15 * (t_hot + t_spmm)
+    out(row("table1.dense.cdist", t_cdist * 1e6,
+            f"{100*t_cdist/tot:.1f}%_of_step"))
+    out(row("table1.dense.exp_k", t_k * 1e6, f"{100*t_k/tot:.1f}%"))
+    out(row("table1.dense.sddmm_line", t_hot * 1e6,
+            f"{100*15*t_hot/tot:.1f}%_hot_line_paper_91.9%"))
+    out(row("table1.dense.spmm_line", t_spmm * 1e6,
+            f"{100*15*t_spmm/tot:.1f}%"))
+
+    # --- sparse stages (paper §4 kernels, ELL form) ----------------------
+    from repro.core.sinkhorn_sparse import precompute_sparse
+    pre = precompute_sparse(r, vecs_sel, vecs, corpus.docs, lam)
+    x = jnp.full((r.shape[0], N), float(r.shape[0]))
+
+    @jax.jit
+    def sparse_iter(x):
+        u = 1.0 / x
+        t = jnp.einsum("knl,kn->nl", pre.G, u)
+        w = jnp.where(pre.val > 0, pre.val / t, 0.0)
+        return jnp.einsum("knl,nl->kn", pre.G_over_r, w)
+
+    t_sp = timeit(sparse_iter, x)
+    out(row("table1.sparse.fused_iter", t_sp * 1e6,
+            f"dense_iter/sparse_iter={((t_hot + t_spmm) / t_sp):.1f}x"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Core library: the paper's contribution as composable JAX modules."""
+from .sinkhorn import (cdist, precompute, select_support, sinkhorn_wmd_dense,
+                       sinkhorn_wmd_dense_stabilized)
+from .sinkhorn_sparse import (precompute_sparse, sinkhorn_wmd_sparse,
+                              sinkhorn_wmd_sparse_unfused)
+from .sparse import (BlockSparse, PaddedDocs, block_density,
+                     block_sparse_from_dense, padded_docs_from_dense,
+                     padded_docs_from_lists, padded_docs_to_dense)
+from .wmd import IMPLS, many_to_many, one_to_many
+from .router import route, sinkhorn_route, topk_route
+
+__all__ = [
+    "cdist", "precompute", "select_support", "sinkhorn_wmd_dense",
+    "sinkhorn_wmd_dense_stabilized", "precompute_sparse",
+    "sinkhorn_wmd_sparse", "sinkhorn_wmd_sparse_unfused", "BlockSparse",
+    "PaddedDocs", "block_density", "block_sparse_from_dense",
+    "padded_docs_from_dense", "padded_docs_from_lists",
+    "padded_docs_to_dense", "IMPLS", "many_to_many", "one_to_many",
+    "route", "sinkhorn_route", "topk_route",
+]

@@ -1,0 +1,208 @@
+"""Multi-chip Sinkhorn-WMD via shard_map — the paper's parallelization at pod
+scale (DESIGN.md §3).
+
+Two distribution schemes, mirroring the paper's baseline->optimized arc:
+
+``dense`` (paper-faithful distributed baseline)
+    Vocabulary V sharded over the ``model`` axis, documents N over ``data``
+    (and ``pod`` when present). Per iteration: Kᵀ@u and the c-mask are local;
+    the contraction x = K_over_r @ v crosses the V sharding -> one psum of a
+    (v_r, N_local) tile over ``model`` per iteration. This is the distributed
+    analogue of the paper's shared-memory dense kernel.
+
+``sparse`` (production path)
+    After precompute, the ELL iteration touches only per-document state, so
+    documents are sharded over *all* mesh axes (N / n_chips docs per chip)
+    and the loop runs with ZERO collectives — the pod-scale version of the
+    paper's observation that threads own disjoint nnz ranges. Precompute in
+    the baseline recomputes cdist per chip (replicated V); the optimized
+    variant (``sparse_vshard``) shards cdist over ``model`` and assembles G
+    with one psum — see EXPERIMENTS.md §Perf.
+
+Load balance across shards (the paper's nnz binary-search) is handled at
+ingest by ``repro.data.corpus.shard_balanced``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .sinkhorn import cdist
+from .sparse import PaddedDocs
+
+
+def _doc_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All mesh axes, used jointly to shard the document dimension."""
+    return tuple(mesh.axis_names)
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# --------------------------------------------------------------------------
+# dense distributed (paper-faithful baseline)
+# --------------------------------------------------------------------------
+
+def sinkhorn_wmd_dense_distributed(r, vecs_sel, vecs, c, lam: float,
+                                   n_iter: int, mesh: Mesh):
+    """Dense Alg. 1 with V over ``model`` and N over the data axes.
+
+    Inputs: r (v_r,) vecs_sel (v_r, w) vecs (V, w) c (V, N).
+    V and N must divide the respective mesh axis sizes.
+    """
+    data_axes = _data_axes(mesh)
+    v_spec = P("model")               # vocab-sharded
+    c_spec = P("model", data_axes)
+    out_spec = P(data_axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P(), v_spec, c_spec),
+        out_specs=out_spec)
+    def run(r, vecs_sel, vecs_loc, c_loc):
+        m = cdist(vecs_sel, vecs_loc)            # (v_r, V_loc)
+        k = jnp.exp(-lam * m)
+        k_over_r = k / r[:, None]
+        km = k * m
+        v_r = r.shape[0]
+        n_loc = c_loc.shape[1]
+        x = jnp.full((v_r, n_loc), 1.0 / v_r, dtype=k.dtype)
+        x = lax.pvary(x, tuple(data_axes))  # carry varies over doc shards
+
+        def body(x, _):
+            u = 1.0 / x
+            v = c_loc * (1.0 / (k.T @ u))        # local (V_loc, N_loc)
+            # contraction over V crosses the model sharding -> one psum/iter
+            x = lax.psum(k_over_r @ v, "model")
+            return x, None
+
+        x, _ = lax.scan(body, x, None, length=n_iter)
+        u = 1.0 / x
+        v = c_loc * (1.0 / (k.T @ u))
+        return lax.psum(jnp.sum(u * (km @ v), axis=0), "model")
+
+    return run(r, vecs_sel, vecs, c)
+
+
+# --------------------------------------------------------------------------
+# sparse distributed (production path)
+# --------------------------------------------------------------------------
+
+def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
+                                    lam: float, n_iter: int, mesh: Mesh,
+                                    vshard_precompute: bool = True):
+    """ELL fused Sinkhorn with docs sharded over every mesh axis.
+
+    ``vshard_precompute=False``: baseline — every chip computes the full
+    (v_r, V) cdist and gathers its docs' columns locally (replicated
+    compute, zero collectives).
+
+    ``vshard_precompute=True`` (beyond-paper optimized): cdist is sharded
+    over ``model`` (each chip owns V/model_size vocab columns), each chip
+    gathers the columns it owns for *its* docs and one psum over ``model``
+    assembles G — cutting precompute FLOPs/chip by the model-axis size at
+    the cost of a single (3, v_r, N_loc, L) all-reduce before the loop.
+    """
+    doc_axes = _doc_axes(mesh)
+    docs_spec = P(doc_axes)
+    out_spec = P(doc_axes)
+
+    if not vshard_precompute:
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(), P(), P(), docs_spec, docs_spec),
+            out_specs=out_spec)
+        def run(r, vecs_sel, vecs_full, idx_loc, val_loc):
+            m = cdist(vecs_sel, vecs_full)                 # replicated (v_r, V)
+            k = jnp.exp(-lam * m)
+            g = jnp.take(k, idx_loc, axis=1)
+            gm = jnp.take(k * m, idx_loc, axis=1)
+            return _ell_loop(r, g, gm, val_loc, n_iter, doc_axes)
+
+        return run(r, vecs_sel, vecs, docs.idx, docs.val)
+
+    # optimized: vocab-sharded precompute, psum_scatter-assembled gather.
+    # Docs enter sharded over the data axes and REPLICATED over model; each
+    # model shard gathers the K columns it owns for every doc in the data
+    # shard, then one psum_scatter over model simultaneously (a) sums the
+    # per-vocab-shard contributions and (b) deals each model shard its
+    # 1/model_size slice of the docs — after which the loop owns docs over
+    # data x model jointly, same as the baseline.
+    n_model = mesh.shape["model"]
+    v = vecs.shape[0]
+    v_loc_size = v // n_model
+    data_axes = _data_axes(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P(), P("model"), P(data_axes), P(data_axes)),
+        out_specs=P(data_axes + ("model",)))
+    def run(r, vecs_sel, vecs_loc, idx_loc, val_loc):
+        midx = lax.axis_index("model")
+        lo = midx * v_loc_size
+        m = cdist(vecs_sel, vecs_loc)                      # (v_r, V_loc)
+        k = jnp.exp(-lam * m)
+        km = k * m
+        # gather only ids this chip owns; others contribute zeros to the sum
+        rel = idx_loc - lo
+        mine = (rel >= 0) & (rel < v_loc_size)
+        rel = jnp.where(mine, rel, 0)
+        g = jnp.where(mine[None], jnp.take(k, rel, axis=1), 0.0)
+        gm = jnp.where(mine[None], jnp.take(km, rel, axis=1), 0.0)
+        # assemble + redistribute docs over the model axis in one collective
+        g = lax.psum_scatter(g, "model", scatter_dimension=1, tiled=True)
+        gm = lax.psum_scatter(gm, "model", scatter_dimension=1, tiled=True)
+        n_slice = val_loc.shape[0] // n_model
+        val_my = lax.dynamic_slice_in_dim(val_loc, midx * n_slice, n_slice, 0)
+        return _ell_loop(r, g, gm, val_my, n_iter,
+                         data_axes + ("model",))
+
+    return run(r, vecs_sel, vecs, docs.idx, docs.val)
+
+
+def _ell_loop(r, g, gm, val, n_iter, vary_axes=()):
+    """The collective-free fused SDDMM_SpMM iteration (per shard)."""
+    v_r = g.shape[0]
+    n_loc = g.shape[1]
+    g_over_r = g / r[:, None, None]
+    live = val > 0
+    x = jnp.full((v_r, n_loc), 1.0 / v_r, dtype=g.dtype)
+    if vary_axes:
+        x = lax.pvary(x, tuple(vary_axes))  # match shard-varying carry type
+
+    def body(x, _):
+        u = 1.0 / x
+        t = jnp.einsum("knl,kn->nl", g, u)
+        w = jnp.where(live, val / t, 0.0)
+        x = jnp.einsum("knl,nl->kn", g_over_r, w)
+        return x, None
+
+    x, _ = lax.scan(body, x, None, length=n_iter)
+    u = 1.0 / x
+    t = jnp.einsum("knl,kn->nl", g, u)
+    w = jnp.where(live, val / t, 0.0)
+    return jnp.einsum("kn,knl,nl->n", u, gm, w)
+
+
+def sharded_inputs(mesh: Mesh, r, vecs_sel, vecs, docs: PaddedDocs,
+                   for_impl: str = "sparse"):
+    """Device_put inputs with the shardings the distributed solvers expect."""
+    doc_axes = _doc_axes(mesh)
+    if for_impl == "sparse":
+        specs = dict(vecs=P() if True else P("model"),
+                     idx=P(doc_axes), val=P(doc_axes))
+    else:
+        specs = dict(vecs=P("model"), idx=None, val=None)
+    put = lambda x, s: jax.device_put(x, NamedSharding(mesh, s))
+    out = dict(r=put(r, P()), vecs_sel=put(vecs_sel, P()),
+               vecs=put(vecs, specs["vecs"]))
+    if for_impl == "sparse":
+        out["docs"] = PaddedDocs(idx=put(docs.idx, specs["idx"]),
+                                 val=put(docs.val, specs["val"]))
+    return out

@@ -1,0 +1,148 @@
+"""Dense one-to-many Sinkhorn-Knopp WMD solver (paper Algorithm 1 / Fig. 2).
+
+This module is the *paper-faithful* baseline: a direct JAX transliteration of
+the python implementation in Fig. 2 of the paper (which itself implements
+Cuturi'13 Algorithm 1 specialized to WMD). All matrices are dense; the hot
+kernel is the dense ``K.T @ u`` followed by the sparse elementwise selection —
+exactly the formulation the paper profiles in Table 1 and then replaces with
+sparse kernels (see :mod:`repro.core.sinkhorn_sparse`).
+
+Shapes follow the paper's notation:
+  V    vocabulary size
+  v_r  number of unique words in the query/source document (nnz of r)
+  N    number of target documents
+  w    word-embedding width
+
+Conventions: ``lam`` is the positive regularization strength; the kernel is
+``K = exp(-lam * M)`` (the paper negates lambda before the call; we negate
+inside).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def cdist(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pairwise Euclidean distance, GEMM-shaped (paper §6).
+
+    ``m[i, j] = sqrt(|a_i|^2 + |b_j|^2 - 2 a_i.b_j)`` — one big matmul plus
+    rank-1 corrections instead of a broadcast-subtract (which would
+    materialize an (v_r, V, w) intermediate). This is the paper's
+    "matrix-multiplication-like" Euclidean distance restructuring.
+    """
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    b2 = jnp.sum(b * b, axis=-1)[None, :]
+    ab = a @ b.T
+    d2 = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
+    return jnp.sqrt(d2)
+
+
+class SinkhornPrecompute(NamedTuple):
+    """Loop-invariant matrices (paper: "can be pre-computed once and reused")."""
+
+    M: jax.Array          # (v_r, V) transport cost
+    K: jax.Array          # (v_r, V) exp(-lam*M)
+    K_over_r: jax.Array   # (v_r, V) diag(1/r) K
+    KM: jax.Array         # (v_r, V) K * M
+
+
+def precompute(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
+               lam: float) -> SinkhornPrecompute:
+    """Compute M, K, K_over_r, KM for the selected query words.
+
+    ``r``        (v_r,)   normalized word frequencies of the query (nnz only)
+    ``vecs_sel`` (v_r, w) embeddings of the query words
+    ``vecs``     (V, w)   full vocabulary embeddings
+    """
+    M = cdist(vecs_sel, vecs)
+    K = jnp.exp(-lam * M)
+    return SinkhornPrecompute(M=M, K=K, K_over_r=K / r[:, None], KM=K * M)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iter",))
+def sinkhorn_wmd_dense(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
+                       c: jax.Array, lam: float, n_iter: int) -> jax.Array:
+    """Paper Fig. 2, dense: WMD of one query against N target documents.
+
+    ``c`` (V, N) column-normalized word-frequency matrix of the targets,
+    *dense* here (the paper's python baseline stores it sparse but the
+    compute is dense GEMM + elementwise mask — identical arithmetic).
+
+    Returns ``wmd`` (N,).
+    """
+    pre = precompute(r, vecs_sel, vecs, lam)
+    v_r = r.shape[0]
+    n_docs = c.shape[1]
+    x = jnp.full((v_r, n_docs), 1.0 / v_r, dtype=pre.K.dtype)
+
+    def body(x, _):
+        u = 1.0 / x
+        # Table 1 hot line: v = c.multiply(1 / (K.T @ u))  (91.9% of runtime)
+        kt_u = pre.K.T @ u                       # (V, N) dense GEMM
+        v = c * (1.0 / kt_u)                     # sparse selection, dense here
+        x = pre.K_over_r @ v                     # (v_r, N) "SpMM" line
+        return x, None
+
+    x, _ = lax.scan(body, x, None, length=n_iter)
+    u = 1.0 / x
+    v = c * (1.0 / (pre.K.T @ u))
+    return jnp.sum(u * (pre.KM @ v), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iter",))
+def sinkhorn_wmd_dense_stabilized(r: jax.Array, vecs_sel: jax.Array,
+                                  vecs: jax.Array, c: jax.Array, lam: float,
+                                  n_iter: int) -> jax.Array:
+    """Beyond-paper: log-domain Sinkhorn (numerically stable for large lam).
+
+    The paper runs fp64 on CPU; on TPU (fp32/bf16) large ``lam`` underflows
+    ``exp(-lam*M)``. The log-domain iteration replaces scaling vectors with
+    dual potentials f, g and matmuls with logsumexp reductions.
+
+    Solves the same fixed point: P = diag(exp(f*lam)) K diag(exp(g*lam)).
+    """
+    M = cdist(vecs_sel, vecs)                    # (v_r, V)
+    v_r = r.shape[0]
+    n_docs = c.shape[1]
+    log_r = jnp.log(r)                           # (v_r,)
+    # columns with c==0 contribute -inf log-mass
+    log_c = jnp.where(c > 0, jnp.log(jnp.where(c > 0, c, 1.0)), -jnp.inf)
+
+    f = jnp.zeros((v_r, n_docs), M.dtype)        # potential per (word, doc)
+    g = jnp.zeros_like(c)                        # (V, N)
+
+    def body(carry, _):
+        f, g = carry
+        # g update: column marginal  (logsumexp over query words)
+        s = -lam * M[:, :, None] + f[:, None, :]            # (v_r, V, N)
+        g = log_c - jax.nn.logsumexp(s, axis=0)             # (V, N)
+        g = jnp.where(jnp.isneginf(log_c), -jnp.inf, g)
+        # f update: row marginal (logsumexp over vocabulary)
+        t = -lam * M[:, :, None] + g[None, :, :]            # (v_r, V, N)
+        f = log_r[:, None] - jax.nn.logsumexp(t, axis=1)    # (v_r, N)
+        return (f, g), None
+
+    (f, g), _ = lax.scan(body, (f, g), None, length=n_iter)
+    # transport plan P[k, i, n] = exp(f + g - lam*M); WMD = <P, M>
+    log_p = f[:, None, :] + g[None, :, :] - lam * M[:, :, None]
+    p = jnp.exp(jnp.where(jnp.isneginf(log_p), -jnp.inf, log_p))
+    return jnp.sum(p * M[:, :, None], axis=(0, 1))
+
+
+def select_support(r_full, vecs, dtype=jnp.float32):
+    """Host-side support selection (paper: ``sel = r.squeeze() > 0``).
+
+    Dynamic-shape step, so it runs outside jit. Returns (r_sel, vecs_sel, idx).
+    """
+    import numpy as np
+
+    r_full = np.asarray(r_full).reshape(-1)
+    idx = np.nonzero(r_full > 0)[0]
+    r_sel = r_full[idx].astype(dtype)
+    r_sel = r_sel / r_sel.sum()
+    return jnp.asarray(r_sel), jnp.asarray(np.asarray(vecs)[idx], dtype=dtype), idx

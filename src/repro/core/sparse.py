@@ -1,0 +1,151 @@
+"""Sparse document-collection containers.
+
+The paper stores the target-document word-frequency matrix ``c`` (V x N,
+density ~0.0035%) in CSR and load-balances by splitting nnz across threads
+with a binary search. Neither variable-length CSR rows nor runtime binary
+search map onto XLA/TPU (static shapes, no scalar-efficient gather loops), so
+we adapt the same *work-avoidance* idea to two TPU-native layouts:
+
+``PaddedDocs`` (ELL / padded-CSC by document)
+    Each target document j stores its word ids ``idx[j, :L]`` and normalized
+    frequencies ``val[j, :L]``, padded to the collection max ``L`` (~dozens).
+    nnz work becomes dense (N, L, v_r) einsums — every FLOP is useful up to
+    the pad fraction, all accesses are unit-stride after one gather, and the
+    layout is trivially shardable over documents. This is the layout the
+    sparse Sinkhorn solver and the SDDMM_SpMM Pallas kernel consume.
+
+``BlockSparse`` (BSR over the (V, N) matrix)
+    MXU-aligned zero-tile skipping, used by the block-sparse kernel variant
+    and as the general-purpose format when documents share vocabulary.
+
+Load balancing (paper: equal nnz per thread) is done at ingest: documents are
+sorted by nnz and dealt round-robin to shards, then padded — see
+``repro.data.corpus.shard_balanced``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class PaddedDocs(NamedTuple):
+    """ELL-format document collection: c[idx[j,l], j] = val[j,l]."""
+
+    idx: jnp.ndarray   # (N, L) int32 word ids; padding repeats id 0
+    val: jnp.ndarray   # (N, L) float   normalized frequencies; padding == 0
+
+    @property
+    def n_docs(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def max_words(self) -> int:
+        return self.idx.shape[1]
+
+    def mask(self) -> jnp.ndarray:
+        return self.val > 0
+
+
+def padded_docs_from_dense(c: np.ndarray, max_words: int | None = None,
+                           dtype=np.float32) -> PaddedDocs:
+    """Build ELL docs from a dense (V, N) column-normalized matrix."""
+    c = np.asarray(c)
+    v, n = c.shape
+    nnz_per_doc = (c > 0).sum(axis=0)
+    length = int(max_words if max_words is not None else max(1, nnz_per_doc.max()))
+    idx = np.zeros((n, length), dtype=np.int32)
+    val = np.zeros((n, length), dtype=dtype)
+    for j in range(n):
+        rows = np.nonzero(c[:, j] > 0)[0][:length]
+        idx[j, : len(rows)] = rows
+        val[j, : len(rows)] = c[rows, j]
+    return PaddedDocs(idx=jnp.asarray(idx), val=jnp.asarray(val))
+
+
+def padded_docs_from_lists(word_ids: list[np.ndarray], counts: list[np.ndarray],
+                           max_words: int | None = None,
+                           dtype=np.float32) -> PaddedDocs:
+    """Build ELL docs from per-document (unique word id, count) lists.
+
+    Frequencies are normalized per document (paper: ``sum(c[:, j]) == 1``).
+    """
+    n = len(word_ids)
+    length = int(max_words if max_words is not None
+                 else max(1, max(len(w) for w in word_ids)))
+    idx = np.zeros((n, length), dtype=np.int32)
+    val = np.zeros((n, length), dtype=dtype)
+    for j, (w, cnt) in enumerate(zip(word_ids, counts)):
+        w = np.asarray(w)[:length]
+        cnt = np.asarray(cnt, dtype=np.float64)[:length]
+        idx[j, : len(w)] = w
+        val[j, : len(w)] = (cnt / cnt.sum()).astype(dtype)
+    return PaddedDocs(idx=jnp.asarray(idx), val=jnp.asarray(val))
+
+
+def padded_docs_to_dense(docs: PaddedDocs, vocab_size: int) -> np.ndarray:
+    """Inverse of :func:`padded_docs_from_dense` (tests / dense baseline)."""
+    idx = np.asarray(docs.idx)
+    val = np.asarray(docs.val)
+    n, length = idx.shape
+    c = np.zeros((vocab_size, n), dtype=val.dtype)
+    for j in range(n):
+        for l in range(length):
+            if val[j, l] > 0:
+                c[idx[j, l], j] += val[j, l]
+    return c
+
+
+class BlockSparse(NamedTuple):
+    """BSR over a (V, N) matrix with MXU-aligned (bv, bn) tiles.
+
+    Only tiles containing at least one nonzero are stored. ``blocks`` holds
+    the dense tile contents; (``brow``, ``bcol``) the tile coordinates. The
+    count of retained tiles is padded to ``n_blocks`` (zero tiles appended at
+    coordinate (0, 0) with all-zero content) so shapes are static.
+    """
+
+    blocks: jnp.ndarray  # (n_blocks, bv, bn) tile values
+    brow: jnp.ndarray    # (n_blocks,) int32 tile row (vocab) index
+    bcol: jnp.ndarray    # (n_blocks,) int32 tile col (doc) index
+    shape: tuple[int, int]  # padded (V, N)
+
+    @property
+    def block_shape(self) -> tuple[int, int]:
+        return self.blocks.shape[1], self.blocks.shape[2]
+
+
+def block_sparse_from_dense(c: np.ndarray, bv: int = 128, bn: int = 128,
+                            pad_blocks_to: int | None = None,
+                            dtype=np.float32) -> BlockSparse:
+    c = np.asarray(c, dtype=dtype)
+    v, n = c.shape
+    vp, np_ = -(-v // bv) * bv, -(-n // bn) * bn
+    cp = np.zeros((vp, np_), dtype=dtype)
+    cp[:v, :n] = c
+    tiles = cp.reshape(vp // bv, bv, np_ // bn, bn).transpose(0, 2, 1, 3)
+    nz = np.argwhere(np.abs(tiles).sum(axis=(2, 3)) > 0)
+    total = len(nz) if pad_blocks_to is None else pad_blocks_to
+    if total < len(nz):
+        raise ValueError(f"pad_blocks_to={total} < {len(nz)} live tiles")
+    blocks = np.zeros((max(total, 1), bv, bn), dtype=dtype)
+    brow = np.zeros((max(total, 1),), dtype=np.int32)
+    bcol = np.zeros((max(total, 1),), dtype=np.int32)
+    for k, (i, j) in enumerate(nz):
+        blocks[k] = tiles[i, j]
+        brow[k], bcol[k] = i, j
+    return BlockSparse(blocks=jnp.asarray(blocks), brow=jnp.asarray(brow),
+                       bcol=jnp.asarray(bcol), shape=(vp, np_))
+
+
+def block_density(c: np.ndarray, bv: int = 128, bn: int = 128) -> float:
+    """Fraction of (bv, bn) tiles with any nonzero — the TPU work ratio."""
+    c = np.asarray(c)
+    v, n = c.shape
+    vp, np_ = -(-v // bv) * bv, -(-n // bn) * bn
+    cp = np.zeros((vp, np_), dtype=c.dtype)
+    cp[:v, :n] = c
+    tiles = cp.reshape(vp // bv, bv, np_ // bn, bn).transpose(0, 2, 1, 3)
+    live = (np.abs(tiles).sum(axis=(2, 3)) > 0).sum()
+    return float(live) / (tiles.shape[0] * tiles.shape[1])

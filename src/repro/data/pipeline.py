@@ -1,0 +1,57 @@
+"""Deterministic stateless token pipeline.
+
+Restart-exact by construction: batch(step) is a pure function of
+(seed, step, shape) via counter-mode hashing (threefry), so a job resumed
+from a checkpoint at step k replays the identical stream with NO pipeline
+state in the checkpoint — the fault-tolerance property the checkpointer
+relies on (DESIGN.md §6). Per-host sharding: each host materializes only its
+slice of the global batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+
+def batch_at_step(dc: DataConfig, step: int, host_id: int = 0,
+                  n_hosts: int = 1) -> dict:
+    """Synthetic-corpus batch for ``step`` (host slice). Labels are the
+    next-token shift; a simple Markov-ish structure (mixing two hash streams)
+    gives the model something learnable."""
+    per_host = dc.global_batch // n_hosts
+    key = jax.random.fold_in(jax.random.PRNGKey(dc.seed), step)
+    key = jax.random.fold_in(key, host_id)
+    base = jax.random.randint(key, (per_host, dc.seq_len + 1), 0,
+                              dc.vocab_size, dtype=jnp.int32)
+    # inject copy structure: second half echoes the first half shifted
+    half = dc.seq_len // 2
+    echoed = base.at[:, half + 1:].set(base[:, 1:dc.seq_len - half + 1])
+    return {"tokens": echoed[:, :-1], "labels": echoed[:, 1:]}
+
+
+def host_batch_iterator(dc: DataConfig, start_step: int = 0, host_id: int = 0,
+                        n_hosts: int = 1):
+    step = start_step
+    while True:
+        yield step, batch_at_step(dc, step, host_id, n_hosts)
+        step += 1
+
+
+def wmd_request_stream(corpus, seed: int = 0):
+    """Batched WMD serving requests: yields full-vocab query histograms
+    drawn from the corpus query set (repro.data.corpus.make_corpus)."""
+    rng = np.random.default_rng(seed)
+    n = corpus.queries.shape[0]
+    while True:
+        yield corpus.queries[rng.integers(0, n)]

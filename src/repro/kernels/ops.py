@@ -1,0 +1,87 @@
+"""jit'd user-facing wrappers around the Pallas kernels.
+
+Handles TPU-alignment padding (the kernels' shape contract) and exposes
+``sinkhorn_wmd_kernel`` — the full WMD pipeline on the kernel path, result
+bit-identical (up to fp reassociation) to ``repro.core`` oracles.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on a
+real TPU the same call sites compile to Mosaic. ``INTERPRET`` flips the
+default per-platform.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse import PaddedDocs
+from . import cdist_exp as _cdist_exp
+from . import sddmm_spmm as _sddmm_spmm
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def cdist_exp(a, b, r, lam: float, block_v: int = 512,
+              interpret: bool | None = None):
+    """Fused (M, K, K_over_r) with auto-padding. a (v_r, w), b (V, w)."""
+    interpret = INTERPRET if interpret is None else interpret
+    v_r, w = a.shape
+    v = b.shape[0]
+    ap = pad_to(pad_to(a, 1, 128), 0, 8)
+    bp = pad_to(pad_to(b, 1, 128), 0, block_v)
+    rp = pad_to(r, 0, 8, value=1.0)          # pad rows divide by 1
+    m, k, kr = _cdist_exp.cdist_exp(ap, bp, rp, lam,
+                                    block_v=block_v, interpret=interpret)
+    return m[:v_r, :v], k[:v_r, :v], kr[:v_r, :v]
+
+
+def sddmm_spmm_step(g, g_over_r, val, x, block_n: int = 128,
+                    interpret: bool | None = None):
+    interpret = INTERPRET if interpret is None else interpret
+    v_r, n, length = g.shape
+    gp = pad_to(pad_to(pad_to(g, 2, 128), 1, block_n), 0, 8)
+    gorp = pad_to(pad_to(pad_to(g_over_r, 2, 128), 1, block_n), 0, 8)
+    valp = pad_to(pad_to(val, 1, 128), 0, block_n)
+    xp = pad_to(pad_to(x, 1, block_n), 0, 8)
+    out = _sddmm_spmm.sddmm_spmm_step(gp, gorp, valp, xp, block_n=block_n,
+                                      interpret=interpret)
+    return out[:v_r, :n]
+
+
+def sinkhorn_fused_all(g, gm, val, r, n_iter: int, block_n: int = 128,
+                       interpret: bool | None = None):
+    interpret = INTERPRET if interpret is None else interpret
+    v_r, n, length = g.shape
+    gp = pad_to(pad_to(pad_to(g, 2, 128), 1, block_n), 0, 8)
+    gmp = pad_to(pad_to(pad_to(gm, 2, 128), 1, block_n), 0, 8)
+    valp = pad_to(pad_to(val, 1, 128), 0, block_n)
+    rp = pad_to(r, 0, 8, value=1.0)
+    wmd = _sddmm_spmm.sinkhorn_fused_all(gp, gmp, valp, rp, n_iter,
+                                         block_n=block_n, interpret=interpret)
+    return wmd[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "n_iter", "interpret"))
+def sinkhorn_wmd_kernel(r, vecs_sel, vecs, docs: PaddedDocs, lam: float,
+                        n_iter: int, interpret: bool | None = None):
+    """Full kernel-path WMD: cdist_exp -> gather (XLA) -> fused solver.
+
+    The gather between the two kernels stays in XLA (TPU gather over the
+    vocab axis); everything else runs in Pallas.
+    """
+    m, k, _ = cdist_exp(vecs_sel, vecs, r, lam, interpret=interpret)
+    g = jnp.take(k, docs.idx, axis=1)          # (v_r, N, L)
+    gm = jnp.take(k * m, docs.idx, axis=1)
+    return sinkhorn_fused_all(g, gm, docs.val, r, n_iter,
+                              interpret=interpret)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernels for the fused SDDMM_SpMM Sinkhorn iteration (paper §4).
+
+Two kernels, in increasing fusion depth:
+
+``sddmm_spmm_step``
+    One Sinkhorn iteration: SDDMM (t = sum_k G u), sparse selection
+    (w = val/t), SpMM (x' = sum_l (G/r) w) — the paper's Fig. 4 kernel in ELL
+    form. G streams HBM->VMEM once per call; the intermediate ``w`` lives
+    only in VREGs (that is the paper's fusion: "output values from SDDMM can
+    be fed directly to the SpMM and would not need to be stored in memory").
+
+``sinkhorn_fused_all``
+    Beyond-paper: the ENTIRE solver (all iterations + the final distance
+    line) for a block of documents with the G tile *resident in VMEM*. The
+    paper's appendix notes the kernel remains memory-bound without tiling
+    ("if we assume that all matrices can be loaded from cache, the runtime
+    ... can be improved further"); on TPU the G tile (v_r x block_n x L
+    ~ 1 MB) comfortably fits the ~16 MB VMEM, so HBM traffic drops from
+    (2 reads of G per iteration) to (1 read of G + GM total) and the
+    iteration becomes compute-bound. This is the TPU analogue of the
+    adaptive-sparse-tiling improvement the paper cites as future work [5].
+
+Layout note (paper: "data could be transposed on the fly to ensure
+unit-stride data accesses"): G is laid out (v_r, N, L) so both reductions —
+over k (sublane) for SDDMM and over l (lane) for SpMM — are unit-stride in
+VMEM; no transposes are materialized.
+
+Padding contract (see ops.py): padded query rows carry G == 0 and padded
+doc slots carry val == 0; the ``where`` guards make both inert, so kernel
+results on padded problems equal the unpadded oracle exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _safe_inv(x):
+    return jnp.where(x > 0, 1.0 / jnp.where(x > 0, x, 1.0), 0.0)
+
+
+def _step_kernel(g_ref, gor_ref, val_ref, x_ref, xout_ref):
+    g = g_ref[...]                        # (v_r, bn, L)
+    gor = gor_ref[...]                    # (v_r, bn, L)
+    val = val_ref[...]                    # (bn, L)
+    x = x_ref[...]                        # (v_r, bn)
+    u = _safe_inv(x)
+    t = jnp.sum(g * u[:, :, None], axis=0)             # SDDMM   (bn, L)
+    w = val * _safe_inv(t)                             # sparse selection
+    xout_ref[...] = jnp.sum(gor * w[None, :, :], axis=2)  # SpMM  (v_r, bn)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sddmm_spmm_step(g: jax.Array, g_over_r: jax.Array, val: jax.Array,
+                    x: jax.Array, block_n: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """One fused SDDMM_SpMM Sinkhorn iteration. g, g_over_r: (v_r, N, L);
+    val: (N, L); x: (v_r, N) -> new x (v_r, N)."""
+    v_r, n, length = g.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    g_spec = pl.BlockSpec((v_r, block_n, length), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        _step_kernel,
+        grid=grid,
+        in_specs=[g_spec, g_spec,
+                  pl.BlockSpec((block_n, length), lambda i: (i, 0)),
+                  pl.BlockSpec((v_r, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((v_r, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((v_r, n), g.dtype),
+        interpret=interpret,
+    )(g, g_over_r, val, x)
+
+
+def _fused_kernel(g_ref, gm_ref, val_ref, r_ref, wmd_ref, *, n_iter: int):
+    g = g_ref[...]                        # (v_r, bn, L) resident in VMEM
+    gm = gm_ref[...]
+    val = val_ref[...]
+    r = r_ref[...]                        # (v_r, 1)
+    gor = g * _safe_inv(r)[:, :, None]    # padded rows: r inv -> 0 is fine,
+    # but r pad is 1.0 by contract; g pad rows are 0 so gor pad rows are 0.
+    v_r = g.shape[0]
+    bn = g.shape[1]
+    live = (val > 0).astype(g.dtype)
+    rowmask = (jnp.sum(jnp.abs(g), axis=(1, 2), keepdims=False) > 0)
+    x0 = jnp.where(rowmask, 1.0 / jnp.sum(rowmask.astype(g.dtype)), 0.0)
+    x = jnp.broadcast_to(x0[:, None], (v_r, bn)).astype(g.dtype)
+
+    def body(_, x):
+        u = _safe_inv(x)
+        t = jnp.sum(g * u[:, :, None], axis=0)
+        w = val * _safe_inv(t) * live
+        return jnp.sum(gor * w[None, :, :], axis=2)
+
+    x = jax.lax.fori_loop(0, n_iter, body, x)
+    u = _safe_inv(x)
+    t = jnp.sum(g * u[:, :, None], axis=0)
+    w = val * _safe_inv(t) * live
+    # final line: wmd[j] = sum_k u[k,j] * sum_l GM[k,j,l] w[j,l]
+    wmd = jnp.sum(u * jnp.sum(gm * w[None, :, :], axis=2), axis=0)  # (bn,)
+    wmd_ref[...] = wmd[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_iter", "block_n", "interpret"))
+def sinkhorn_fused_all(g: jax.Array, gm: jax.Array, val: jax.Array,
+                       r: jax.Array, n_iter: int, block_n: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """Whole Sinkhorn solve + WMD for all docs; one HBM pass over G and GM.
+
+    g, gm: (v_r, N, L); val: (N, L); r: (v_r,) with padded rows == 1.0 and
+    padded G rows == 0. Returns wmd (N,).
+    """
+    v_r, n, length = g.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    g_spec = pl.BlockSpec((v_r, block_n, length), lambda i: (0, i, 0))
+    wmd = pl.pallas_call(
+        functools.partial(_fused_kernel, n_iter=n_iter),
+        grid=grid,
+        in_specs=[g_spec, g_spec,
+                  pl.BlockSpec((block_n, length), lambda i: (i, 0)),
+                  pl.BlockSpec((v_r, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), g.dtype),
+        interpret=interpret,
+    )(g, gm, val, r.reshape(-1, 1))
+    return wmd[0]

@@ -1,0 +1,101 @@
+"""Serving launchers.
+
+Two servers, matching the paper's two workload kinds:
+
+LM decode server (assigned archs):
+    PYTHONPATH=src python -m repro.launch.serve --arch granite_3_2b \
+        --reduced --batch 4 --steps 32
+
+WMD one-to-many query server (the paper's own workload — a query document
+against the whole corpus at once):
+    PYTHONPATH=src python -m repro.launch.serve --wmd --n-docs 2048 \
+        --impl kernel
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.models import transformer as T
+
+
+def serve_lm(args) -> None:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cache = T.init_cache(cfg, args.batch, max_len=args.steps + 8)
+    step = jax.jit(M.make_serve_step(cfg))
+    tok = jnp.ones((args.batch, 1), jnp.int32)
+    times = []
+    for i in range(args.steps):
+        t0 = time.time()
+        tok, logits, cache = step(params, cache, tok)
+        tok.block_until_ready()
+        times.append(time.time() - t0)
+    times = np.asarray(times[2:]) * 1e3
+    print(json.dumps({
+        "arch": cfg.name, "batch": args.batch, "steps": args.steps,
+        "ms_per_token_p50": round(float(np.percentile(times, 50)), 2),
+        "ms_per_token_p99": round(float(np.percentile(times, 99)), 2),
+        "tokens_per_s": round(args.batch / (times.mean() / 1e3), 1),
+    }))
+
+
+def serve_wmd(args) -> None:
+    from repro.core import one_to_many
+    from repro.data.corpus import make_corpus
+    from repro.data.pipeline import wmd_request_stream
+    corpus = make_corpus(vocab_size=args.vocab, embed_dim=args.embed_dim,
+                         n_docs=args.n_docs, n_queries=8, seed=0)
+    reqs = wmd_request_stream(corpus)
+    times = []
+    for i in range(args.steps):
+        q = next(reqs)
+        t0 = time.time()
+        d = one_to_many(q, corpus.docs, corpus.vecs, lam=args.lam,
+                        n_iter=args.n_iter, impl=args.impl)
+        jax.block_until_ready(d)
+        times.append(time.time() - t0)
+        if i == 0:
+            top = np.argsort(np.asarray(d))[:3]
+            print(f"query 0 -> top-3 docs {top.tolist()}")
+    times = np.asarray(times[1:]) * 1e3
+    print(json.dumps({
+        "workload": "wmd_one_to_many", "impl": args.impl,
+        "n_docs": args.n_docs, "vocab": args.vocab,
+        "ms_per_query_p50": round(float(np.percentile(times, 50)), 2),
+        "docs_per_s": round(args.n_docs / (times.mean() / 1e3), 0),
+    }))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--wmd", action="store_true")
+    ap.add_argument("--impl", default="sparse")
+    ap.add_argument("--n-docs", type=int, default=1024)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--embed-dim", type=int, default=64)
+    ap.add_argument("--lam", type=float, default=10.0)
+    ap.add_argument("--n-iter", type=int, default=15)
+    args = ap.parse_args()
+    if args.wmd:
+        serve_wmd(args)
+    else:
+        assert args.arch, "--arch required for LM serving"
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,328 @@
+"""Transformer substrate layers: norms, RoPE, GQA flash attention (custom-vjp
+online-softmax — O(T) memory in both passes), MLP variants.
+
+Everything is pure-function + param-dict (no framework dependency); params
+are created by ``init_*`` functions and consumed by the matching ``apply``
+functions. Layouts are chosen for Megatron-style tensor parallelism: QKV and
+MLP-in are column-sharded on the output feature dim, out-proj and MLP-out are
+row-sharded on the input dim (see repro.runtime.sharding for the rules).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict[str, Any]
+
+NEG_INF = -1e30
+
+# Tensor-parallel axis name for activation sharding constraints. Set by the
+# launchers (dryrun/train) when running under a mesh; None (default, smoke
+# tests / single device) makes the constraints no-ops. Without the explicit
+# head-axis constraints SPMD resolves the flash-attention scan carry as
+# REPLICATED and all-gathers q/k/v per layer (measured 9.9 TB of
+# all-gathers on qwen2.5 train_4k; EXPERIMENTS.md §Perf #1).
+TP_AXIS: str | None = None
+DP_AXES: tuple = ()          # data-parallel axes (batch dim sharding)
+MESH = None                  # concrete mesh (enables shard_map EP for MoE)
+
+
+def _constrain(x: jax.Array, *spec) -> jax.Array:
+    """spec entries: "tp" -> TP_AXIS, "dp" -> DP_AXES, None -> replicated.
+    None here really means replicated — forgetting "dp" on the batch dim
+    forces batch replication (measured as f32 full-batch all-gathers x36 on
+    granite; EXPERIMENTS.md §Perf #2)."""
+    if TP_AXIS is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    ent = [TP_AXIS if s == "tp" else (DP_AXES or None) if s == "dp" else None
+           for s in spec]
+    return lax.with_sharding_constraint(x, P(*ent))
+
+
+
+# ----------------------------------------------------------------- norms
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps).astype(x.dtype)
+    return out * p["scale"].astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = ((xf - mu) * lax.rsqrt(var + eps)).astype(x.dtype)
+    return out * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+
+
+def apply_norm(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32) -> Params:
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float, positions: jax.Array):
+    """positions (T,) -> cos/sin (T, head_dim/2), fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., T, D); cos/sin (T, D/2). Rotate-half convention."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    shape = (1,) * (x.ndim - 2) + cos.shape
+    c = cos.reshape(shape).astype(x.dtype)
+    s = sin.reshape(shape).astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ------------------------------------------------- flash attention (GQA)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
+                    block_k: int = 512):
+    """Online-softmax attention, O(T*block_k) live memory fwd AND bwd.
+
+    q: (B, G, Hkv, Tq, D) — Hq = G*Hkv query heads grouped by kv head.
+    k, v: (B, Hkv, Tk, D).
+    Returns (B, G, Hkv, Tq, D).
+
+    Tk must divide by block_k. ``q_offset`` is the absolute position of
+    q[..., 0, :] (for chunked prefill).
+    """
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, block_k)
+    return out
+
+
+def _mask(s, causal, q_offset, kstart, tq, bk):
+    if not causal:
+        return s
+    q_pos = q_offset + jnp.arange(tq)
+    k_pos = kstart + jnp.arange(bk)
+    ok = k_pos[None, :] <= q_pos[:, None]
+    return jnp.where(ok, s, NEG_INF)
+
+
+def _flash_fwd_impl(q, k, v, causal, q_offset, block_k):
+    b, g, hkv, tq, d = q.shape
+    tk = k.shape[2]
+    nb = tk // block_k
+    scale = 1.0 / (d ** 0.5)
+    acc_t = jnp.float32
+
+    def body(carry, i):
+        o, m, l = carry
+        kb = lax.dynamic_slice_in_dim(k, i * block_k, block_k, axis=2)
+        vb = lax.dynamic_slice_in_dim(v, i * block_k, block_k, axis=2)
+        s = jnp.einsum("bghqd,bhkd->bghqk", q, kb,
+                       preferred_element_type=acc_t) * scale
+        s = _mask(s, causal, q_offset, i * block_k, tq, block_k)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        o = o * corr[..., None] + jnp.einsum(
+            "bghqk,bhkd->bghqd", p.astype(v.dtype), vb,
+            preferred_element_type=acc_t)
+        return (o, m_new, l), None
+
+    o0 = jnp.zeros((b, g, hkv, tq, d), acc_t)
+    m0 = jnp.full((b, g, hkv, tq), NEG_INF, acc_t)
+    l0 = jnp.zeros((b, g, hkv, tq), acc_t)
+    (o, m, l), _ = lax.scan(body, (o0, m0, l0), jnp.arange(nb))
+    out = (o / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, q_offset, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_offset, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, block_k, res, dout):
+    q, k, v, out, lse = res
+    b, g, hkv, tq, d = q.shape
+    tk = k.shape[2]
+    nb = tk // block_k
+    scale = 1.0 / (d ** 0.5)
+    acc_t = jnp.float32
+    delta = jnp.sum(dout.astype(acc_t) * out.astype(acc_t), axis=-1)  # (b,g,h,q)
+
+    def body(dq, i):
+        kb = lax.dynamic_slice_in_dim(k, i * block_k, block_k, axis=2)
+        vb = lax.dynamic_slice_in_dim(v, i * block_k, block_k, axis=2)
+        s = jnp.einsum("bghqd,bhkd->bghqk", q, kb,
+                       preferred_element_type=acc_t) * scale
+        s = _mask(s, causal, q_offset, i * block_k, tq, block_k)
+        p = jnp.exp(s - lse[..., None])                      # recompute
+        dp = jnp.einsum("bghqd,bhkd->bghqk", dout.astype(acc_t),
+                        vb.astype(acc_t), preferred_element_type=acc_t)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bghqk,bhkd->bghqd", ds.astype(q.dtype), kb,
+                             preferred_element_type=acc_t)
+        dkb = jnp.einsum("bghqk,bghqd->bhkd", ds.astype(q.dtype), q,
+                         preferred_element_type=acc_t)
+        dvb = jnp.einsum("bghqk,bghqd->bhkd", p.astype(dout.dtype), dout,
+                         preferred_element_type=acc_t)
+        return dq, (dkb, dvb)
+
+    dq0 = jnp.zeros(q.shape, acc_t)
+    dq, (dks, dvs) = lax.scan(body, dq0, jnp.arange(nb))
+    # dks: (nb, b, hkv, bk, d) -> (b, hkv, tk, d)
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(k.shape)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(v.shape)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_ref(q, k, v, causal=True, q_offset=0):
+    """Oracle for flash_attention (materializes the score matrix)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bghqd,bhkd->bghqk", q, k,
+                   preferred_element_type=jnp.float32) / (d ** 0.5)
+    if causal:
+        tq, tk = q.shape[-2], k.shape[-2]
+        q_pos = q_offset + jnp.arange(tq)
+        ok = jnp.arange(tk)[None, :] <= q_pos[:, None]
+        s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bghqk,bhkd->bghqd", p.astype(v.dtype), v)
+
+
+# ---------------------------------------------------------------- attention
+def init_attention(key, d_model: int, n_q: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool, dtype=jnp.float32) -> Params:
+    """n_q, n_kv are the TP-adjusted (padded/replicated) head counts."""
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(kq, (d_model, n_q * head_dim), dtype) * s,
+        "wk": jax.random.normal(kk, (d_model, n_kv * head_dim), dtype) * s,
+        "wv": jax.random.normal(kv_, (d_model, n_kv * head_dim), dtype) * s,
+        "wo": jax.random.normal(ko, (n_q * head_dim, d_model), dtype) * s,
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_q * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def attention_train(p: Params, x: jax.Array, n_q: int, n_kv: int,
+                    head_dim: int, rope_theta: float | None,
+                    block_k: int = 512) -> jax.Array:
+    """Causal self-attention over a full sequence (training / prefill).
+
+    x: (B, T, d). Uses flash attention; GQA grouping n_q = G * n_kv.
+    """
+    b, t, _ = x.shape
+    g = n_q // n_kv
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # kv-MAJOR head layout: the flattened (n_q*head_dim) projection shards
+    # contiguously over TP, and kv-major makes the shard boundary land on
+    # the kv-head dim -> pure dim sharding, no resharding gathers
+    q = q.reshape(b, t, n_kv, g, head_dim).transpose(0, 3, 2, 1, 4)
+    k = k.reshape(b, t, n_kv, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, n_kv, head_dim).transpose(0, 2, 1, 3)
+    # pin batch+head sharding across the flash scan (see TP_AXIS note)
+    q = _constrain(q, "dp", None, "tp", None, None)
+    k = _constrain(k, "dp", "tp", None, None)
+    v = _constrain(v, "dp", "tp", None, None)
+    if rope_theta is not None:
+        cos, sin = rope_frequencies(head_dim, rope_theta, jnp.arange(t))
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    bk = min(block_k, t)
+    o = flash_attention(q, k, v, True, 0, bk)          # (B,G,Hkv,T,D)
+    o = _constrain(o, "dp", None, "tp", None, None)
+    # back to kv-major flat layout (matches wo row order)
+    o = o.transpose(0, 3, 2, 1, 4).reshape(b, t, n_q * head_dim)
+    return o @ p["wo"]
+
+
+def attention_decode(p: Params, x: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, pos: jax.Array, n_q: int,
+                     n_kv: int, head_dim: int, rope_theta: float | None):
+    """Single-token decode with a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, n_kv, S, D); pos: () int32 — number of valid
+    cache entries == absolute position of this token.
+    Returns (out (B, 1, d), new_cache_k, new_cache_v).
+    """
+    b, _, _ = x.shape
+    g = n_q // n_kv
+    s_len = cache_k.shape[2]
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, n_kv, g, head_dim).transpose(0, 3, 2, 1, 4)
+    k = k.reshape(b, 1, n_kv, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, 1, n_kv, head_dim).transpose(0, 2, 1, 3)
+    if rope_theta is not None:
+        posv = pos[None] if pos.ndim == 0 else pos
+        cos, sin = rope_frequencies(head_dim, rope_theta, posv)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    ck = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                         pos, axis=2)
+    cv = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                         pos, axis=2)
+    scores = jnp.einsum("bghqd,bhkd->bghqk", q, ck,
+                        preferred_element_type=jnp.float32) / (head_dim ** 0.5)
+    valid = jnp.arange(s_len)[None] <= pos          # positions 0..pos live
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bghqk,bhkd->bghqd", pr.astype(cv.dtype), cv)
+    o = o.transpose(0, 3, 2, 1, 4).reshape(b, 1, n_q * head_dim)
+    return o @ p["wo"], ck, cv
+
+
+# ----------------------------------------------------------------- MLPs
+def init_mlp(key, d_model: int, d_ff: int, kind: str,
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    if kind == "swiglu":
+        return {"w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+                "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+                "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out}
+    return {"w_in": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+            "w_out": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out}
+
+
+def mlp(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "squared_relu":                       # nemotron-4
+        h = jax.nn.relu(x @ p["w_in"])
+        return (h * h) @ p["w_out"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+    raise ValueError(kind)

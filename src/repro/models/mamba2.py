@@ -1,0 +1,184 @@
+"""Mamba2 (SSD) block — chunked parallel scan, JAX-native.
+
+State-space recurrence per head h (scalar decay a_t = exp(dt_t * A_h)):
+    S_t = a_t * S_{t-1} + dt_t * B_t x_t^T          S: (N, P)
+    y_t = C_t . S_t + D_h * x_t
+
+Chunked (SSD) evaluation: within a chunk of length c the pairwise decay
+matrix L[t, s] = exp(cum[t] - cum[s]) (s <= t, bounded <= 1 — numerically
+safe by construction) gives the intra-chunk term as two small einsums; the
+inter-chunk term carries S through a lax.scan over T/c chunks. This is the
+standard Mamba2 "chunkwise" algorithm mapped onto MXU-friendly einsums.
+
+TP note: projections are SPLIT (w_z/w_x/w_dt head-sharded; w_bc replicated —
+B/C are shared across heads, n_groups=1) so heads shard cleanly over the
+``model`` mesh axis without slicing through a fused in_proj. The gated
+RMSNorm reduces over the sharded d_inner axis; XLA inserts the (scalar-sized)
+cross-shard reduction automatically.
+
+Used by zamba2-7b (the [hybrid] assigned arch). Decode is the one-step
+recurrence with (conv window, S) carried in the serve cache.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict[str, Any]
+
+
+def init_mamba2(key, d_model: int, d_state: int = 64, head_dim: int = 64,
+                expand: int = 2, conv_width: int = 4,
+                dtype=jnp.float32) -> Params:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "w_z": jax.random.normal(ks[0], (d_model, d_inner), dtype) * s,
+        "w_x": jax.random.normal(ks[1], (d_model, d_inner), dtype) * s,
+        "w_bc": jax.random.normal(ks[2], (d_model, 2 * d_state), dtype) * s,
+        "w_dt": jax.random.normal(ks[3], (d_model, n_heads), dtype) * s,
+        "conv_x": jax.random.normal(ks[4], (conv_width, d_inner), dtype) * 0.2,
+        "conv_bc": jax.random.normal(ks[5], (conv_width, 2 * d_state),
+                                     dtype) * 0.2,
+        "conv_bias_x": jnp.zeros((d_inner,), dtype),
+        "conv_bias_bc": jnp.zeros((2 * d_state,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(dtype)),
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": jax.random.normal(key, (d_inner, d_model), dtype)
+                    * (d_inner ** -0.5),
+    }
+
+
+def _causal_conv(x, w, bias):
+    """Depthwise causal conv, width W: (B, T, C), (W, C) -> (B, T, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + bias)
+
+
+def _gated_out(p, y, z):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * lax.rsqrt(var + 1e-6).astype(y.dtype)) * p["norm_scale"]
+    return y @ p["out_proj"]
+
+
+def mamba2_train(p: Params, xin: jax.Array, d_state: int = 64,
+                 head_dim: int = 64, chunk: int = 128) -> jax.Array:
+    """Full-sequence chunked SSD. xin (B, T, d). T % chunk == 0."""
+    b, t, _ = xin.shape
+    chunk = min(chunk, t)
+    d_inner = p["out_proj"].shape[0]
+    n_heads = d_inner // head_dim
+
+    z = xin @ p["w_z"]
+    xs = _causal_conv(xin @ p["w_x"], p["conv_x"], p["conv_bias_x"])
+    bc = _causal_conv(xin @ p["w_bc"], p["conv_bc"], p["conv_bias_bc"])
+    xs = xs.reshape(b, t, n_heads, head_dim)
+    bmat, cmat = bc[..., :d_state], bc[..., d_state:]          # (B,T,N)
+    dt = jax.nn.softplus(xin @ p["w_dt"] + p["dt_bias"])       # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                   # (H,) < 0
+    da = dt * a                                                # (B,T,H) <= 0
+
+    nc = t // chunk
+    xs_c = xs.reshape(b, nc, chunk, n_heads, head_dim).transpose(1, 0, 2, 3, 4)
+    b_c = bmat.reshape(b, nc, chunk, d_state).transpose(1, 0, 2, 3)
+    c_c = cmat.reshape(b, nc, chunk, d_state).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(b, nc, chunk, n_heads).transpose(1, 0, 2, 3)
+    da_c = da.reshape(b, nc, chunk, n_heads).transpose(1, 0, 2, 3)
+
+    def chunk_body(s0, inp):
+        xc, bcv, ccv, dtc, dac = inp        # (B,c,H,P),(B,c,N),(B,c,N),(B,c,H)
+        cum = jnp.cumsum(dac, axis=1)                          # (B,c,H)
+        # intra: L[t,s] = exp(cum[t]-cum[s]) for s<=t  (all exponents <= 0)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]        # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        # clamp BEFORE exp: masked (s > t) entries have ldiff >= 0 and would
+        # overflow; 0*inf in the VJP poisons gradients otherwise
+        l_mat = jnp.where(tri, jnp.exp(jnp.where(tri, ldiff, 0.0)), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", ccv, bcv)              # (B,c,c)
+        y = jnp.einsum("bts,btsh,bsh,bshp->bthp", cb, l_mat, dtc, xc)
+        # inter: y += exp(cum[t]) * C_t . S0
+        y = y + jnp.exp(cum)[..., None] * jnp.einsum(
+            "btn,bhnp->bthp", ccv, s0)
+        # state: S = exp(cum[-1]) S0 + sum_s exp(cum[-1]-cum[s]) dt_s B_s x_s^T
+        dec = jnp.exp(cum[:, -1:, :] - cum)                    # (B,c,H) <= 1
+        s_new = jnp.exp(cum[:, -1])[:, :, None, None] * s0 + jnp.einsum(
+            "bsh,bsn,bshp->bhnp", dec * dtc, bcv, xc)
+        return s_new, y
+
+    s0 = jnp.zeros((b, n_heads, d_state, head_dim), xin.dtype)
+    _, ys = lax.scan(chunk_body, s0, (xs_c, b_c, c_c, dt_c, da_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, n_heads, head_dim)
+    y = y + p["d_skip"][None, None, :, None] * xs
+    return _gated_out(p, y.reshape(b, t, d_inner), z)
+
+
+def mamba2_decode(p: Params, xin: jax.Array, conv_state: jax.Array,
+                  ssm_state: jax.Array, d_state: int = 64,
+                  head_dim: int = 64):
+    """One-step recurrence. xin (B, 1, d); conv_state (B, W-1, C_x + C_bc);
+    ssm_state (B, H, N, P). Returns (y (B,1,d), conv_state', ssm_state')."""
+    b = xin.shape[0]
+    d_inner = p["out_proj"].shape[0]
+    n_heads = d_inner // head_dim
+
+    z = xin @ p["w_z"]
+    xbc_new = jnp.concatenate([xin @ p["w_x"], xin @ p["w_bc"]], axis=-1)
+    win = jnp.concatenate([conv_state, xbc_new], axis=1)       # (B, W, C)
+    w_cat = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=1)
+    bias = jnp.concatenate([p["conv_bias_x"], p["conv_bias_bc"]])
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, w_cat) + bias)
+    new_conv_state = win[:, 1:]
+
+    xs = conv[:, :d_inner].reshape(b, n_heads, head_dim)
+    bvec = conv[:, d_inner:d_inner + d_state]                  # (B,N)
+    cvec = conv[:, d_inner + d_state:]
+    dt1 = jax.nn.softplus((xin @ p["w_dt"])[:, 0] + p["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt1 * -jnp.exp(p["a_log"]))                # (B,H)
+
+    s_new = decay[:, :, None, None] * ssm_state + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt1, bvec, xs)
+    y = jnp.einsum("bn,bhnp->bhp", cvec, s_new)
+    y = y + p["d_skip"][None, :, None] * xs
+    return _gated_out(p, y.reshape(b, 1, d_inner), z[:, :1]), \
+        new_conv_state, s_new
+
+
+def mamba2_ref(p: Params, xin: jax.Array, d_state: int = 64,
+               head_dim: int = 64) -> jax.Array:
+    """Step-by-step oracle (lax.scan over single timesteps)."""
+    b, t, _ = xin.shape
+    d_inner = p["out_proj"].shape[0]
+    n_heads = d_inner // head_dim
+    z = xin @ p["w_z"]
+    xs = _causal_conv(xin @ p["w_x"], p["conv_x"], p["conv_bias_x"])
+    bc = _causal_conv(xin @ p["w_bc"], p["conv_bc"], p["conv_bias_bc"])
+    xs = xs.reshape(b, t, n_heads, head_dim)
+    bmat, cmat = bc[..., :d_state], bc[..., d_state:]
+    dtv = jax.nn.softplus(xin @ p["w_dt"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp
+        decay = jnp.exp(dtt * a)                               # (B,H)
+        s = decay[:, :, None, None] * s + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((b, n_heads, d_state, head_dim), xin.dtype)
+    _, ys = lax.scan(step, s0, (xs.transpose(1, 0, 2, 3),
+                                bmat.transpose(1, 0, 2),
+                                cmat.transpose(1, 0, 2),
+                                dtv.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3) + p["d_skip"][None, None, :, None] * xs
+    return _gated_out(p, y.reshape(b, t, d_inner), z)

@@ -1,0 +1,156 @@
+"""Model bundle: config -> jit-able train_step / serve_step + input specs.
+
+This is the seam between the model zoo and the launchers: everything the
+dry-run, trainer, and server need for an architecture comes from
+``build_bundle(cfg)``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.optim import adamw
+from repro.optim.schedules import cosine_with_warmup
+from . import transformer as T
+
+Params = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class TrainHParams:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    aux_loss_weight: float = 0.01    # MoE load-balance term
+    remat: bool = True
+    microbatch: int | None = None    # grad-accumulation microbatch size
+
+
+def make_train_step(cfg: ArchConfig, tp: int = 1,
+                    hp: TrainHParams = TrainHParams(),
+                    batch_axes: tuple | None = None) -> Callable:
+    """(params, opt_state, batch{tokens, labels}) -> (params, opt_state,
+    metrics). Pure; jit/pjit at the call site.
+
+    With ``hp.microbatch`` set, gradients accumulate in fp32 over a scan of
+    microbatches (bounds live activation memory to one microbatch — together
+    with sqrt-remat this is what fits the 340B train cells in HBM)."""
+
+    def loss_fn(params, tokens, labels):
+        hidden, aux = T.forward(cfg, params, tokens, tp=tp, remat=hp.remat)
+        ce = T.lm_loss(cfg, params, hidden, labels)
+        return ce + hp.aux_loss_weight * aux.astype(jnp.float32), (ce, aux)
+
+    def grads_of(params, batch):
+        gb = batch["tokens"].shape[0]
+        if hp.microbatch and hp.microbatch < gb:
+            nmb = gb // hp.microbatch
+            mbs = jax.tree.map(
+                lambda x: x.reshape((nmb, hp.microbatch) + x.shape[1:]),
+                batch)
+            if batch_axes:
+                # keep microbatches sharded over the data axes — without
+                # this constraint SPMD loses the batch sharding through the
+                # reshape and replicates activations (measured: 6.4 GB
+                # f32 all-gathers x192 on qwen2.5; EXPERIMENTS.md §Perf #1)
+                from jax.sharding import PartitionSpec as _P
+                spec = _P(None, batch_axes, None)
+                mbs = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(x, spec), mbs)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def mb_body(acc, mb):
+                g_acc, loss_a, ce_a, aux_a = acc
+                (loss, (ce, aux)), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb["tokens"],
+                                           mb["labels"])
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_a + loss, ce_a + ce,
+                        aux_a + aux.astype(jnp.float32)), None
+
+            (g, loss, ce, aux), _ = jax.lax.scan(
+                mb_body, (g0, 0.0, 0.0, 0.0), mbs)
+            inv = 1.0 / nmb
+            grads = jax.tree.map(lambda x: x * inv, g)
+            return (loss * inv, (ce * inv, aux * inv)), grads
+        return jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch["tokens"], batch["labels"])
+
+    def train_step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = grads_of(params, batch)
+        lr = cosine_with_warmup(opt_state.step + 1, peak_lr=hp.peak_lr,
+                                warmup_steps=hp.warmup_steps,
+                                total_steps=hp.total_steps)
+        params, opt_state, gnorm = adamw.update(
+            grads, opt_state, params, lr, weight_decay=hp.weight_decay,
+            clip_norm=hp.clip_norm)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, "grad_norm": gnorm,
+                   "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, tp: int = 1) -> Callable:
+    """(params, cache, tokens (B,1)) -> (next_tokens (B,1), logits, cache)."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = T.decode_step(cfg, params, cache, tokens, tp=tp)
+        nxt = jnp.argmax(logits, axis=-1).astype(tokens.dtype)[:, None]
+        return nxt, logits, cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ArchConfig, tp: int = 1,
+                 block_k: int = 512) -> Callable:
+    """(params, tokens (B,T)) -> logits (B, T_last only) — inference-prefill
+    forward (no loss, no grads); used by the prefill_* dry-run cells."""
+
+    def prefill(params, tokens):
+        hidden, _ = T.forward(cfg, params, tokens, tp=tp, remat=False,
+                              block_k=block_k)
+        head = T.lm_head_matrix(cfg, params)
+        return (hidden[:, -1] @ head).astype(jnp.float32)
+
+    return prefill
+
+
+# ----------------------------------------------------------- input specs
+def train_input_specs(cfg: ArchConfig, global_batch: int, seq_len: int):
+    """ShapeDtypeStructs for one train step's batch."""
+    return {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
+
+
+def decode_input_specs(cfg: ArchConfig, global_batch: int):
+    return jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+
+
+def abstract_params(cfg: ArchConfig, tp: int = 1, dtype=jnp.float32):
+    """Parameter ShapeDtypeStructs WITHOUT allocating (for the dry-run)."""
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, tp=tp, dtype=dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int, tp: int = 1,
+                   dtype=jnp.float32):
+    return jax.eval_shape(
+        functools.partial(T.init_cache, cfg, batch, max_len, tp=tp,
+                          dtype=dtype))
+
+
+def abstract_opt_state(abstract_p):
+    return jax.eval_shape(adamw.init, abstract_p)

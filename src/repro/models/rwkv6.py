@@ -1,0 +1,162 @@
+"""RWKV-6 "Finch" block — data-dependent decay linear attention, chunked.
+
+Per head (key/value dim D), with data-dependent diagonal decay w_t in (0,1)^D
+and per-head bonus u:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t            S: (D, D)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Chunked evaluation: all pairwise decays are exp(lw[t-1] - lw[s]) with
+lw = inclusive cumsum(log w) DECREASING, so every exponent is <= 0 — the
+computation is numerically safe by construction (no exp(+x) factorization;
+we pay a (c, c, D) einsum per chunk instead, which the MXU amortizes).
+
+Simplifications vs the released RWKV-6 (noted per DESIGN.md): static
+token-shift mixing coefficients (RWKV-5 style) instead of the ddlerp LoRA
+for r/k/v/g; the *decay* LoRA — the defining Finch feature — is kept
+data-dependent. Channel-mix FFN is the standard d_ff squared-ReLU variant.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict[str, Any]
+
+
+def init_rwkv6(key, d_model: int, head_dim: int = 64, decay_lora: int = 64,
+               n_heads: int | None = None, dtype=jnp.float32) -> Params:
+    # n_heads may exceed d_model // head_dim (TP padding — see configs.base)
+    n_heads = (d_model // head_dim) if n_heads is None else n_heads
+    d_attn = n_heads * head_dim
+    ks = jax.random.split(key, 8)
+    s = d_model ** -0.5
+    return {
+        "mu": 0.5 * jnp.ones((5, d_model), dtype),   # shift mix for r,k,v,w,g
+        "wr": jax.random.normal(ks[0], (d_model, d_attn), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d_model, d_attn), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d_model, d_attn), dtype) * s,
+        "wg": jax.random.normal(ks[3], (d_model, d_attn), dtype) * s,
+        "wo": jax.random.normal(ks[4], (d_attn, d_model), dtype)
+              * (d_attn ** -0.5),
+        # decay LoRA: w = exp(-exp(w0 + tanh(x @ w1) @ w2))
+        "w0": jnp.full((d_attn,), -1.0, dtype),
+        "w1": jax.random.normal(ks[5], (d_model, decay_lora), dtype) * s,
+        "w2": jax.random.normal(ks[6], (decay_lora, d_attn), dtype)
+              * (decay_lora ** -0.5),
+        "u": jax.random.normal(ks[7], (n_heads, head_dim), dtype) * 0.1,
+        "ln_scale": jnp.ones((d_attn,), dtype),      # per-head group norm
+    }
+
+
+def _mix(x, x_shift, mu):
+    return x + mu * (x_shift - x)
+
+
+def _proj_rkvwg(p, x, x_shift, n_heads, head_dim):
+    b, t, d = x.shape
+    r = _mix(x, x_shift, p["mu"][0]) @ p["wr"]
+    k = _mix(x, x_shift, p["mu"][1]) @ p["wk"]
+    v = _mix(x, x_shift, p["mu"][2]) @ p["wv"]
+    xw = _mix(x, x_shift, p["mu"][3])
+    g = jax.nn.silu(_mix(x, x_shift, p["mu"][4]) @ p["wg"])
+    logw = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["w1"]) @ p["w2"])  # < 0
+    shp = (b, t, n_heads, head_dim)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            logw.reshape(shp), g)
+
+
+def _out(p, o, g, b, t, d_model):
+    of = o.reshape(b, t, -1)
+    var = jnp.mean(jnp.square(of.astype(jnp.float32)), -1, keepdims=True)
+    of = of * lax.rsqrt(var + 1e-6).astype(of.dtype) * p["ln_scale"]
+    return (of * g) @ p["wo"]
+
+
+def rwkv6_train(p: Params, x: jax.Array, head_dim: int = 64,
+                chunk: int = 64) -> jax.Array:
+    """Full-sequence chunked WKV6. x (B, T, d); T % chunk == 0."""
+    b, t, d_model = x.shape
+    chunk = min(chunk, t)
+    n_heads = p["wo"].shape[0] // head_dim
+    x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, logw, g = _proj_rkvwg(p, x, x_shift, n_heads, head_dim)
+    u = p["u"]
+
+    nc = t // chunk
+    rs = r.reshape(b, nc, chunk, n_heads, head_dim).transpose(1, 0, 3, 2, 4)
+    ks = k.reshape(b, nc, chunk, n_heads, head_dim).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nc, chunk, n_heads, head_dim).transpose(1, 0, 3, 2, 4)
+    lw = logw.reshape(b, nc, chunk, n_heads, head_dim).transpose(1, 0, 3, 2, 4)
+    # shapes now (nc, B, H, c, D)
+
+    def chunk_body(s0, inp):
+        rc, kc, vc, lwc = inp                       # (B,H,c,D)
+        cum = jnp.cumsum(lwc, axis=2)               # inclusive, decreasing
+        cum_excl = cum - lwc                        # lw up to t-1
+        # inter-chunk: o_t += (r_t * exp(cum_excl[t])) @ S0
+        q_t = rc * jnp.exp(cum_excl)
+        o = jnp.einsum("bhtd,bhde->bhte", q_t, s0)
+        # intra-chunk: A[t,s] = sum_d r[t,d] k[s,d] exp(cum_excl[t]-cum[s]),
+        # s < t (exponent <= 0 since cum decreasing); diagonal uses bonus u.
+        ddiff = cum_excl[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,t,s,D)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)[None, None, :, :, None]
+        # clamp BEFORE exp (masked entries have ddiff >= 0; 0*inf VJP poison)
+        dec = jnp.where(tri, jnp.exp(jnp.where(tri, ddiff, 0.0)), 0.0)
+        amat = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rc, kc, dec)
+        diag = jnp.einsum("bhtd,bhtd->bht", rc * u[None, :, None, :], kc)
+        amat = amat + diag[..., None] * jnp.eye(chunk, dtype=amat.dtype)
+        o = o + jnp.einsum("bhts,bhsd->bhtd", amat, vc)
+        # state update: S = exp(cum[-1]) S0 + sum_s exp(cum[-1]-cum[s]) k_s v_s
+        dec_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,H,c,D) <= 1
+        s_new = jnp.exp(cum[:, :, -1])[..., None] * s0 + jnp.einsum(
+            "bhsd,bhse->bhde", kc * dec_end, vc)
+        return s_new, o
+
+    s0 = jnp.zeros((b, n_heads, head_dim, head_dim), x.dtype)
+    _, os_ = lax.scan(chunk_body, s0, (rs, ks, vs, lw))
+    o = os_.transpose(1, 0, 3, 2, 4).reshape(b, t, n_heads, head_dim)
+    return _out(p, o, g, b, t, d_model)
+
+
+def rwkv6_decode(p: Params, x: jax.Array, shift_state: jax.Array,
+                 wkv_state: jax.Array, head_dim: int = 64):
+    """One token. x (B,1,d); shift_state (B,1,d) previous token's input;
+    wkv_state (B,H,D,D). Returns (out, new_shift, new_wkv)."""
+    b, _, d_model = x.shape
+    n_heads = p["wo"].shape[0] // head_dim
+    r, k, v, logw, g = _proj_rkvwg(p, x, shift_state, n_heads, head_dim)
+    r1, k1, v1, lw1 = r[:, 0], k[:, 0], v[:, 0], logw[:, 0]   # (B,H,D)
+    u = p["u"]
+    kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+    o = jnp.einsum("bhd,bhde->bhe", r1, wkv_state + u[None, :, :, None] * kv)
+    s_new = jnp.exp(lw1)[..., None] * wkv_state + kv
+    out = _out(p, o[:, None], g, b, 1, d_model)
+    return out, x, s_new
+
+
+def rwkv6_ref(p: Params, x: jax.Array, head_dim: int = 64) -> jax.Array:
+    """Step-by-step oracle."""
+    b, t, d_model = x.shape
+    n_heads = p["wo"].shape[0] // head_dim
+    x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, logw, g = _proj_rkvwg(p, x, x_shift, n_heads, head_dim)
+    u = p["u"]
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp                       # (B,H,D)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        o = jnp.einsum("bhd,bhde->bhe", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lwt)[..., None] * s + kv
+        return s, o
+
+    s0 = jnp.zeros((b, n_heads, head_dim, head_dim), x.dtype)
+    _, os_ = lax.scan(step, s0, (r.transpose(1, 0, 2, 3),
+                                 k.transpose(1, 0, 2, 3),
+                                 v.transpose(1, 0, 2, 3),
+                                 logw.transpose(1, 0, 2, 3)))
+    o = os_.transpose(1, 0, 2, 3)
+    return _out(p, o, g, b, t, d_model)

@@ -1,0 +1,392 @@
+"""Decoder-only LM assembly: config -> init / forward / loss / decode.
+
+One code path covers all 10 assigned architectures:
+
+  dense / vlm / audio  — [attn + mlp] x L, scan-over-layers (+ remat)
+  moe                  — [attn + moe] x L (Sinkhorn or top-k router)
+  ssm (rwkv6)          — [time-mix + channel-mix] x L
+  hybrid (zamba2)      — groups of ``attn_every`` mamba2 layers, each group
+                         followed by ONE weight-shared (attn + mlp) block;
+                         two-level scan (groups x layers-in-group) keeps the
+                         HLO size depth-independent
+
+Params are plain pytrees with per-layer leaves STACKED on a leading dim so
+the layer stack is a single lax.scan (depth-independent compile time and
+HLO — essential for the 512-device dry-run). jax.checkpoint around the block
+body gives activation rematerialization in the backward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from . import mamba2 as M2
+from . import moe as MOE
+from . import rwkv6 as R6
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------- helpers
+def _stack_init(key, n: int, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _largest_pow2_divisor_leq(t: int, cap: int) -> int:
+    c = 1
+    while c * 2 <= cap and t % (c * 2) == 0:
+        c *= 2
+    return c
+
+
+def loss_chunk_len(seq_len: int, vocab: int, budget: int = 1 << 25) -> int:
+    """Tokens per loss chunk so the logits slab stays ~budget elements."""
+    return _largest_pow2_divisor_leq(seq_len, max(1, budget // vocab))
+
+
+def _sqrt_factor(n: int) -> tuple[int, int, int]:
+    """n ~ g*k + rem with g ~ sqrt(n): two-level remat grouping."""
+    g = max(1, int(n ** 0.5))
+    while n // g == 0:
+        g -= 1
+    k = n // g
+    return g, k, n - g * k
+
+
+def two_level_scan(body_fn, h, stacked, n_layers: int, remat: bool):
+    """sqrt(L)-memory remat: outer scan over g groups of k checkpointed
+    layers, each group itself checkpointed -> live residuals O(g + k)
+    instead of O(L) (the classic sqrt-remat schedule; essential for the
+    96-layer/18k-width cells to fit v5e HBM)."""
+    g, k, rem = _sqrt_factor(n_layers)
+    inner_fn = jax.checkpoint(body_fn) if remat else body_fn
+
+    grouped = jax.tree.map(
+        lambda x: x[:g * k].reshape((g, k) + x.shape[1:]), stacked)
+
+    def group_body(h, glp):
+        h, auxs = lax.scan(inner_fn, h, glp)
+        return h, auxs.sum()
+    group_fn = jax.checkpoint(group_body) if remat else group_body
+    h, aux = lax.scan(group_fn, h, grouped)
+    aux = aux.sum()
+    if rem:
+        tail = jax.tree.map(lambda x: x[g * k:], stacked)
+        h, aux2 = lax.scan(inner_fn, h, tail)
+        aux = aux + aux2.sum()
+    return h, aux
+
+
+# ---------------------------------------------------------------- init
+def padded_vocab(cfg: ArchConfig, tp: int) -> int:
+    """Megatron-style vocab padding: embeddings/logits shard over 'model'."""
+    return -(-cfg.vocab_size // tp) * tp
+
+
+def init_params(cfg: ArchConfig, key, tp: int = 1,
+                dtype=jnp.float32) -> Params:
+    ke, kl, ks, kh = jax.random.split(key, 4)
+    d = cfg.d_model
+    vp = padded_vocab(cfg, tp)
+    n_q, n_kv = cfg.tp_heads(tp)
+    p: Params = {
+        "embed": jax.random.normal(ke, (vp, d), dtype) * 0.02,
+        "final_norm": L.init_norm(cfg.norm, d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(kh, (d, vp), dtype) \
+            * (d ** -0.5)
+
+    def init_attn_mlp_block(k):
+        k1, k2 = jax.random.split(k)
+        blk = {
+            "norm1": L.init_norm(cfg.norm, d, dtype),
+            "norm2": L.init_norm(cfg.norm, d, dtype),
+            "attn": L.init_attention(k1, d, n_q, n_kv, cfg.head_dim,
+                                     cfg.qkv_bias, dtype),
+        }
+        if cfg.moe:
+            blk["moe"] = MOE.init_moe(k2, d, cfg.moe.d_ff, cfg.moe.n_experts,
+                                      cfg.moe.n_shared, cfg.moe.top_k,
+                                      tp=tp, dtype=dtype)
+        else:
+            blk["mlp"] = L.init_mlp(k2, d, cfg.d_ff, cfg.mlp, dtype)
+        return blk
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        p["layers"] = _stack_init(kl, cfg.num_layers, init_attn_mlp_block)
+    elif cfg.family == "ssm":                        # rwkv6
+        s = cfg.ssm
+        n_heads = -(-(d // s.head_dim) // tp) * tp   # pad heads to tp
+
+        def init_rwkv_block(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "norm1": L.init_norm(cfg.norm, d, dtype),
+                "norm2": L.init_norm(cfg.norm, d, dtype),
+                "tmix": R6.init_rwkv6(k1, d, s.head_dim, s.decay_lora,
+                                      n_heads, dtype),
+                "cmix": L.init_mlp(k2, d, cfg.d_ff, cfg.mlp, dtype),
+            }
+        p["layers"] = _stack_init(kl, cfg.num_layers, init_rwkv_block)
+    elif cfg.family == "hybrid":                     # zamba2
+        s = cfg.ssm
+        n_groups = cfg.num_layers // cfg.attn_every
+        n_rem = cfg.num_layers - n_groups * cfg.attn_every
+
+        def init_mamba_block(k):
+            return {
+                "norm": L.init_norm(cfg.norm, d, dtype),
+                "mamba": M2.init_mamba2(k, d, s.d_state, s.head_dim,
+                                        s.expand, s.conv_width, dtype),
+            }
+        kg, kr = jax.random.split(kl)
+        grouped = _stack_init(kg, n_groups * cfg.attn_every, init_mamba_block)
+        p["layers"] = jax.tree.map(
+            lambda x: x.reshape((n_groups, cfg.attn_every) + x.shape[1:]),
+            grouped)
+        if n_rem:
+            p["layers_rem"] = _stack_init(kr, n_rem, init_mamba_block)
+        p["shared_block"] = init_attn_mlp_block(ks)  # ONE set of weights
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------------------------------------------------------- forward
+def _attn_mlp_block(cfg: ArchConfig, n_q: int, n_kv: int, lp: Params,
+                    h: jax.Array, block_k: int):
+    hn = L.apply_norm(cfg.norm, lp["norm1"], h)
+    h = h + L.attention_train(lp["attn"], hn, n_q, n_kv, cfg.head_dim,
+                              cfg.rope_theta, block_k)
+    hn = L.apply_norm(cfg.norm, lp["norm2"], h)
+    if cfg.moe:
+        if L.MESH is not None:        # shard_map expert parallelism
+            out, aux = MOE.moe_apply_ep(
+                lp["moe"], hn, cfg.moe.top_k, cfg.moe.router,
+                cfg.moe.capacity_factor, cfg.moe.router_iters,
+                cfg.moe.n_experts, L.MESH, L.DP_AXES, L.TP_AXIS)
+        else:
+            out, aux = MOE.moe_apply(lp["moe"], hn, cfg.moe.top_k,
+                                     cfg.moe.router, cfg.moe.capacity_factor,
+                                     cfg.moe.router_iters,
+                                     n_real=cfg.moe.n_experts)
+        return h + out, aux
+    return h + L.mlp(lp["mlp"], hn, cfg.mlp), jnp.zeros((), h.dtype)
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jax.Array,
+            tp: int = 1, remat: bool = True,
+            block_k: int = 512) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, T) -> (hidden (B, T, d), aux_loss scalar)."""
+    n_q, n_kv = cfg.tp_heads(tp)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    bk = min(block_k, tokens.shape[1])
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(h, lp):
+            h, aux = _attn_mlp_block(cfg, n_q, n_kv, lp, h, bk)
+            return h, aux
+        h, aux = two_level_scan(body, h, params["layers"], cfg.num_layers,
+                                remat)
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        def body(h, lp):
+            hn = L.apply_norm(cfg.norm, lp["norm1"], h)
+            h = h + R6.rwkv6_train(lp["tmix"], hn, s.head_dim, s.chunk)
+            hn = L.apply_norm(cfg.norm, lp["norm2"], h)
+            h = h + L.mlp(lp["cmix"], hn, cfg.mlp)
+            return h, jnp.zeros((), h.dtype)
+        h, _ = two_level_scan(body, h, params["layers"], cfg.num_layers,
+                              remat)
+        aux = jnp.zeros((), h.dtype)
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+
+        def mamba_body(h, lp):
+            hn = L.apply_norm(cfg.norm, lp["norm"], h)
+            return h + M2.mamba2_train(lp["mamba"], hn, s.d_state,
+                                       s.head_dim, s.chunk), None
+        mamba_fn = jax.checkpoint(mamba_body) if remat else mamba_body
+
+        def group_body(h, glp):
+            h, _ = lax.scan(mamba_fn, h, glp)
+            h, _ = _attn_mlp_block(cfg, n_q, n_kv, params["shared_block"],
+                                   h, bk)
+            return h, None
+        group_fn = jax.checkpoint(group_body) if remat else group_body
+        h, _ = lax.scan(group_fn, h, params["layers"])
+        if "layers_rem" in params:
+            h, _ = lax.scan(mamba_fn, h, params["layers_rem"])
+        aux = jnp.zeros((), h.dtype)
+    else:
+        raise ValueError(cfg.family)
+    return L.apply_norm(cfg.norm, params["final_norm"], h), aux
+
+
+def lm_head_matrix(cfg: ArchConfig, params: Params) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def lm_loss(cfg: ArchConfig, params: Params, hidden: jax.Array,
+            labels: jax.Array) -> jax.Array:
+    """Chunked softmax cross-entropy (bounded logits slab; DESIGN.md §6)."""
+    b, t, d = hidden.shape
+    head = lm_head_matrix(cfg, params)
+    vp = head.shape[1]
+    ct = loss_chunk_len(t, cfg.vocab_size)
+    nch = t // ct
+    h_c = hidden.reshape(b, nch, ct, d).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(b, nch, ct).transpose(1, 0, 2)
+    pad_mask = (jnp.arange(vp) >= cfg.vocab_size) * (-1e30) \
+        if vp != cfg.vocab_size else None
+
+    def body(acc, inp):
+        hc, lc = inp
+        z = (hc @ head).astype(jnp.float32)          # (B, ct, Vp)
+        if pad_mask is not None:
+            z = z + pad_mask                         # mask padded vocab rows
+        lse = jax.nn.logsumexp(z, axis=-1)
+        gold = jnp.take_along_axis(z, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    tot, _ = lax.scan(body, jnp.zeros((), jnp.float32), (h_c, l_c))
+    return tot / (b * t)
+
+
+# ---------------------------------------------------------------- decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, tp: int = 1,
+               dtype=jnp.float32) -> Params:
+    """Concrete zero-filled serve cache (use jax.eval_shape for specs)."""
+    n_q, n_kv = cfg.tp_heads(tp)
+    d = cfg.d_model
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        shp = (cfg.num_layers, batch, n_kv, max_len, cfg.head_dim)
+        cache["k"] = jnp.zeros(shp, dtype)
+        cache["v"] = jnp.zeros(shp, dtype)
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        n_heads = -(-(d // s.head_dim) // tp) * tp
+        cache["shift"] = jnp.zeros((cfg.num_layers, 2, batch, 1, d), dtype)
+        cache["wkv"] = jnp.zeros((cfg.num_layers, batch, n_heads,
+                                  s.head_dim, s.head_dim), dtype)
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        n_groups = cfg.num_layers // cfg.attn_every
+        n_rem = cfg.num_layers - n_groups * cfg.attn_every
+        d_in = s.expand * d
+        n_heads = d_in // s.head_dim
+        c_conv = d_in + 2 * s.d_state
+        cache["conv"] = jnp.zeros((n_groups, cfg.attn_every, batch,
+                                   s.conv_width - 1, c_conv), dtype)
+        cache["ssm"] = jnp.zeros((n_groups, cfg.attn_every, batch, n_heads,
+                                  s.d_state, s.head_dim), dtype)
+        if n_rem:
+            cache["conv_rem"] = jnp.zeros((n_rem, batch, s.conv_width - 1,
+                                           c_conv), dtype)
+            cache["ssm_rem"] = jnp.zeros((n_rem, batch, n_heads, s.d_state,
+                                          s.head_dim), dtype)
+        # each of the n_groups shared-block applications has its own KV cache
+        cache["k"] = jnp.zeros((n_groups, batch, n_kv, max_len,
+                                cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros((n_groups, batch, n_kv, max_len,
+                                cfg.head_dim), dtype)
+    return cache
+
+
+def _attn_block_decode(cfg, n_q, n_kv, lp, h, ck, cv, pos):
+    hn = L.apply_norm(cfg.norm, lp["norm1"], h)
+    a, ck, cv = L.attention_decode(lp["attn"], hn, ck, cv, pos, n_q, n_kv,
+                                   cfg.head_dim, cfg.rope_theta)
+    h = h + a
+    hn = L.apply_norm(cfg.norm, lp["norm2"], h)
+    if cfg.moe:
+        if L.MESH is not None:
+            out, _ = MOE.moe_apply_ep(
+                lp["moe"], hn, cfg.moe.top_k, cfg.moe.router,
+                cfg.moe.capacity_factor, cfg.moe.router_iters,
+                cfg.moe.n_experts, L.MESH, L.DP_AXES, L.TP_AXIS)
+        else:
+            out, _ = MOE.moe_apply(lp["moe"], hn, cfg.moe.top_k,
+                                   cfg.moe.router, cfg.moe.capacity_factor,
+                                   cfg.moe.router_iters,
+                                   n_real=cfg.moe.n_experts)
+        h = h + out
+    else:
+        h = h + L.mlp(lp["mlp"], hn, cfg.mlp)
+    return h, ck, cv
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jax.Array, tp: int = 1):
+    """One-token decode. tokens (B, 1) -> (logits (B, V), new cache)."""
+    n_q, n_kv = cfg.tp_heads(tp)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["pos"]
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(h, xs):
+            lp, ck, cv = xs
+            h, ck, cv = _attn_block_decode(cfg, n_q, n_kv, lp, h, ck, cv, pos)
+            return h, (ck, cv)
+        h, (ks, vs) = lax.scan(body, h, (params["layers"], cache["k"],
+                                         cache["v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        def body(h, xs):
+            lp, sh, wkv = xs
+            hn = L.apply_norm(cfg.norm, lp["norm1"], h)
+            o, sh1, wkv = R6.rwkv6_decode(lp["tmix"], hn, sh[0], wkv,
+                                          s.head_dim)
+            h = h + o
+            hn2 = L.apply_norm(cfg.norm, lp["norm2"], h)
+            # channel-mix token shift state (slot 1)
+            h = h + L.mlp(lp["cmix"], hn2, cfg.mlp)
+            return h, (jnp.stack([sh1, hn2]), wkv)
+        h, (shs, wkvs) = lax.scan(body, h, (params["layers"],
+                                            cache["shift"], cache["wkv"]))
+        new_cache["shift"], new_cache["wkv"] = shs, wkvs
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+
+        def mamba_body(h, xs):
+            lp, conv, ssm = xs
+            hn = L.apply_norm(cfg.norm, lp["norm"], h)
+            o, conv, ssm = M2.mamba2_decode(lp["mamba"], hn, conv, ssm,
+                                            s.d_state, s.head_dim)
+            return h + o, (conv, ssm)
+
+        def group_body(h, xs):
+            glp, conv, ssm, ck, cv = xs
+            h, (convs, ssms) = lax.scan(mamba_body, h, (glp, conv, ssm))
+            h, ck, cv = _attn_block_decode(cfg, n_q, n_kv,
+                                           params["shared_block"], h, ck,
+                                           cv, pos)
+            return h, (convs, ssms, ck, cv)
+
+        h, (convs, ssms, ks, vs) = lax.scan(
+            group_body, h, (params["layers"], cache["conv"], cache["ssm"],
+                            cache["k"], cache["v"]))
+        new_cache.update(conv=convs, ssm=ssms, k=ks, v=vs)
+        if "layers_rem" in params:
+            h, (cr, sr) = lax.scan(mamba_body, h,
+                                   (params["layers_rem"], cache["conv_rem"],
+                                    cache["ssm_rem"]))
+            new_cache.update(conv_rem=cr, ssm_rem=sr)
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.apply_norm(cfg.norm, params["final_norm"], h)
+    logits = (h[:, 0] @ lm_head_matrix(cfg, params)).astype(jnp.float32)
+    logits = logits[:, :cfg.vocab_size]              # drop padded vocab rows
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,377 @@
+"""Roofline accounting (EXPERIMENTS.md §Roofline methodology).
+
+XLA's ``compiled.cost_analysis()`` counts while/scan bodies ONCE, which
+under-reports any scanned program (layers, flash-attention blocks, loss
+chunks) by orders of magnitude. Two complementary tools fix this:
+
+``jaxpr_cost(fn, *args)``
+    Walks the closed jaxpr of the TRACED program (backward pass included),
+    multiplying through statically-known scan trip counts:
+      * FLOPs — exact for dot_general/conv (2*M*N*K), 1 flop/element for
+        elementwise — matmul-dominated programs are accounted to ~1%;
+      * major-op HBM bytes — operands+results of dot/conv/gather/scatter/
+        cumsum/sort plus scan carries; elementwise chains are assumed fused
+        (XLA does). This is a principled *lower bound* used to pick the
+        dominant roofline term.
+    Counts are GLOBAL (logical program); per-chip = /n_chips, exact for the
+    sharded dims (padding overhead is IN the jaxpr since models are built
+    with their TP-padded shapes).
+
+``hlo_collective_bytes(compiled_text, trip_hints)``
+    Parses post-SPMD HLO: sums per-op payload bytes of every all-reduce /
+    all-gather / reduce-scatter / all-to-all / collective-permute, multiplies
+    collectives inside while bodies by the loop trip count (parsed from the
+    canonicalized loop condition; falls back to ``trip_hints`` patterns).
+    Bytes are PER DEVICE (post-partitioning shapes).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Any
+
+import jax
+import numpy as np
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_MAJOR_PRIMS = {"dot_general", "conv_general_dilated", "gather", "scatter",
+                "scatter-add", "scatter_add", "cumsum", "sort", "top_k",
+                "dynamic_slice", "dynamic_update_slice", "take"}
+
+
+def _size(aval) -> int:
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def _bytes(aval) -> int:
+    return _size(aval) * aval.dtype.itemsize
+
+
+def _dot_flops(eqn) -> int:
+    (lc, rc), _ = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval
+    k = 1
+    for d in lc:
+        k *= lhs.shape[d]
+    return 2 * _size(eqn.outvars[0].aval) * k
+
+
+class Cost:
+    def __init__(self):
+        self.flops = 0
+        self.major_bytes = 0
+        self.by_prim = defaultdict(int)
+
+    def as_dict(self):
+        top = sorted(self.by_prim.items(), key=lambda kv: -kv[1])[:8]
+        return {"flops": float(self.flops),
+                "major_bytes": float(self.major_bytes),
+                "top_flops_prims": {k: float(v) for k, v in top}}
+
+
+def _walk(jaxpr, mult: int, cost: Cost) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            length = eqn.params["length"]
+            inner = eqn.params["jaxpr"].jaxpr
+            # carries + per-trip slices cross HBM each iteration
+            cost.major_bytes += mult * length * sum(
+                _bytes(v.aval) for v in inner.invars)
+            _walk(inner, mult * length, cost)
+        elif prim == "while":
+            # bounded fori_loop lowered to while: find constant trip count
+            body = eqn.params["body_jaxpr"].jaxpr
+            trips = eqn.params.get("_trip_hint", 1)
+            _walk(body, mult * trips, cost)
+        elif prim == "shard_map":
+            # body is traced at PER-SHARD shapes; every chip in the manual
+            # mesh executes it -> multiply by mesh size so the global
+            # accounting stays consistent with the pjit regions
+            inner = eqn.params["jaxpr"]
+            n_shards = 1
+            for ax in eqn.params["manual_axes"]:
+                n_shards *= dict(zip(eqn.params["mesh"].axis_names,
+                                     eqn.params["mesh"].axis_sizes
+                                     if hasattr(eqn.params["mesh"],
+                                                "axis_sizes")
+                                     else eqn.params["mesh"].shape_tuple
+                                     if hasattr(eqn.params["mesh"],
+                                                "shape_tuple")
+                                     else eqn.params["mesh"].devices.shape)
+                                 )[ax]
+            _walk(getattr(inner, "jaxpr", inner), mult * n_shards, cost)
+        elif prim in ("pjit", "closed_call", "core_call", "remat_call",
+                      "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "checkpoint", "remat2"):
+            inner = (eqn.params.get("jaxpr")
+                     or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                _walk(getattr(inner, "jaxpr", inner), mult, cost)
+        elif prim == "cond":
+            for br in eqn.params["branches"]:
+                _walk(br.jaxpr, mult, cost)       # upper bound: all branches
+        elif prim == "dot_general":
+            f = _dot_flops(eqn) * mult
+            cost.flops += f
+            cost.by_prim[prim] += f
+            cost.major_bytes += mult * (sum(_bytes(v.aval) for v in eqn.invars)
+                                        + _bytes(eqn.outvars[0].aval))
+        elif prim == "conv_general_dilated":
+            out = eqn.outvars[0].aval
+            rhs = eqn.invars[1].aval
+            f = 2 * _size(out) * int(np.prod(rhs.shape[1:])) * mult
+            cost.flops += f
+            cost.by_prim[prim] += f
+            cost.major_bytes += mult * (sum(_bytes(v.aval) for v in eqn.invars)
+                                        + _bytes(out))
+        else:
+            out_elems = sum(_size(v.aval) for v in eqn.outvars
+                            if hasattr(v.aval, "shape"))
+            f = out_elems * mult
+            cost.flops += f
+            cost.by_prim[prim] += f
+            if prim in _MAJOR_PRIMS:
+                cost.major_bytes += mult * (
+                    sum(_bytes(v.aval) for v in eqn.invars)
+                    + sum(_bytes(v.aval) for v in eqn.outvars))
+
+
+def jaxpr_cost(fn, *args, **kwargs) -> dict:
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    cost = Cost()
+    _walk(closed.jaxpr, 1, cost)
+    # program inputs/outputs cross HBM once
+    cost.major_bytes += sum(_bytes(v.aval) for v in closed.jaxpr.invars)
+    cost.major_bytes += sum(_bytes(v.aval) for v in closed.jaxpr.outvars)
+    return cost.as_dict()
+
+
+# ------------------------------------------------------------------ HLO side
+_COLL_RE = re.compile(
+    r"=\s+(\S+?)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _computation_blocks(txt: str) -> dict[str, str]:
+    """Split HLO module text into computation-name -> body.
+
+    Headers are column-0 lines like ``%name (args...) -> type {`` (args may
+    contain nested tuple parens, headers may wrap lines); bodies are the
+    indented lines until the column-0 ``}``."""
+    blocks = {}
+    cur_name, cur = None, []
+    pending_header = None
+    for line in txt.splitlines():
+        if not line.startswith(" ") and line.strip():
+            if cur_name and line.startswith("}"):
+                blocks[cur_name] = "\n".join(cur)
+                cur_name, cur = None, []
+                continue
+            header = (pending_header + " " + line) if pending_header else line
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", header.strip())
+            if "{" in header:
+                pending_header = None
+                if m:
+                    cur_name = m.group(1)
+                    cur = []
+            else:
+                pending_header = header        # wrapped header line
+        elif cur_name:
+            cur.append(line)
+    return blocks
+
+
+def _while_trips(txt: str, blocks: dict[str, str]) -> dict[str, int]:
+    """Map while BODY computation name -> trip count (best-effort parse of
+    the canonical `ivar < constant` condition)."""
+    trips = {}
+    for m in re.finditer(r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*"
+                         r"body=%?([\w\.\-]+)", txt):
+        cond, body = m.group(1), m.group(2)
+        blk = blocks.get(cond, "")
+        n = None
+        cm = re.search(r"compare\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)\s*\)"
+                       r",\s*direction=LT", blk)
+        if cm:
+            for const in cm.groups():
+                km = re.search("%" + re.escape(const) +
+                               r"\s*=\s*s32\[\]\s*constant\((\d+)\)", blk)
+                if km:
+                    n = int(km.group(1))
+                    break
+        if n is None:
+            # canonical loops keep the bound as the only s32 constant
+            consts = re.findall(r"=\s*s32\[\]\s*constant\((\d+)\)", blk)
+            if len(consts) == 1:
+                n = int(consts[0])
+        trips[body] = n if n else 1
+    return trips
+
+
+def _bf16_downcast_ids(txt: str) -> set[str]:
+    """Collective op ids whose result is immediately converted to bf16.
+
+    XLA-CPU promotes bf16 dots to f32 and the SPMD partitioner places the
+    all-reduce BEFORE the convert-back; the TPU backend all-reduces in bf16
+    (verified with a minimal row-sharded matmul probe — see EXPERIMENTS.md
+    §Roofline methodology). Payload bytes for these ops are halved in the
+    ``total_bytes_tpu`` figure."""
+    ids = set()
+    for m in re.finditer(r"=\s*bf16\[[^\]]*\]\S*\s+(?:fusion|convert)"
+                         r"\(%((?:all-reduce|all-gather|reduce-scatter)"
+                         r"[\w\.\-]*)", txt):
+        ids.add(m.group(1))
+    return ids
+
+
+def hlo_collective_bytes(txt: str) -> dict:
+    """Per-device collective payload bytes by op type, while-trip adjusted."""
+    blocks = _computation_blocks(txt)
+    trips = _while_trips(txt, blocks)
+    downcast = _bf16_downcast_ids(txt)
+
+    # computation -> multiplier: bodies of whiles get their trip count;
+    # nested whiles multiply (computed via fixpoint over call edges)
+    mult = {name: 1 for name in blocks}
+    for body, n in trips.items():
+        if body in mult:
+            mult[body] = n
+    # propagate: a while body called from another while body
+    calls = {name: re.findall(r"body=%?([\w\.\-]+)", body_txt)
+             for name, body_txt in blocks.items()}
+    for _ in range(4):                               # small nesting depth
+        for name, callees in calls.items():
+            for c in callees:
+                if c in mult and c in trips:
+                    mult[c] = trips[c] * mult.get(name, 1)
+
+    out: dict[str, float] = defaultdict(float)
+    out_tpu: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    op_id_re = re.compile(r"%((?:all-reduce|all-gather|reduce-scatter|"
+                          r"all-to-all|collective-permute)[\w\.\-]*)\s*=")
+    for name, body_txt in blocks.items():
+        m = mult.get(name, 1)
+        for line in body_txt.splitlines():
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            dtype, dims, kind = cm.group(1), cm.group(2), cm.group(3)
+            b = _shape_bytes(dtype, dims) * m
+            out[kind] += b
+            im = op_id_re.search(line)
+            halve = (dtype == "f32" and im is not None
+                     and im.group(1) in downcast)
+            out_tpu[kind] += b / 2 if halve else b
+            counts[kind] += m
+    total = float(sum(out.values()))
+    return {"per_type_bytes": dict(out), "counts": dict(counts),
+            "total_bytes": total,
+            "total_bytes_tpu": float(sum(out_tpu.values()))}
+
+
+# ---------------------------------------------------- analytic HBM model
+def analytic_hbm_bytes(cfg, kind: str, gb: int, seq: int, n_chips: int,
+                       tp: int, dtype_bytes: int = 2,
+                       act_io_per_block: int = 16) -> float:
+    """Per-chip HBM traffic model (the roofline memory term).
+
+    Sharding-aware where the jaxpr walker cannot be: WEIGHTS are read in
+    full by every data shard (traffic = P/tp per chip), while ACTIVATIONS
+    divide across all chips. Components:
+
+      train:   weights (fwd + remat-refwd + bwd dgrad reads, grad write)
+               + AdamW fp32 state (read m,v,p + write m,v,p)
+               + residual-stream activations: act_io_per_block tensor
+                 passes of (tokens_loc x d) per block, x3 for fwd/refwd/bwd
+               + loss logits slab (fp32 read+write, chunked)
+      prefill: weights once + activations x1
+      decode:  weights once (the classic decode floor) + KV/state cache
+               read+write + small activations
+
+    act_io_per_block=16 ~ residual + norms + qkv/attn + mlp intermediate
+    reads/writes after XLA fusion (validated against the jaxpr major-bytes
+    column at small configs).
+    """
+    p_chip = cfg.n_params() / tp * dtype_bytes
+    d = cfg.d_model
+    tok_loc = gb * seq / max(n_chips / tp, 1)    # tokens per data shard
+    layer_w = max(cfg.num_layers, 1)
+
+    # residual-stream activations are replicated across TP (only weights and
+    # heads shard over 'model'), so act traffic does NOT divide by tp
+    act = act_io_per_block * layer_w * tok_loc * d * dtype_bytes
+    vp = -(-cfg.vocab_size // tp) * tp
+    logits_io = 2 * tok_loc * (vp / tp) * 4      # fp32 slab r+w, V sharded
+
+    if kind == "train":
+        weights = p_chip * (3 + 1)               # fwd, refwd, dgrad + gwrite
+        opt = cfg.n_params() / tp * 4 * 6        # m,v,p fp32 r+w
+        return weights + opt + 3 * act + logits_io
+    if kind == "prefill":
+        return p_chip + act + logits_io
+    # decode: one token; cache dominates
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.family == "ssm":
+            n_heads = -(-(d // cfg.ssm.head_dim) // tp) * tp
+            state = (cfg.num_layers * gb * n_heads * cfg.ssm.head_dim ** 2
+                     + cfg.num_layers * gb * 2 * d)
+        else:
+            d_in = cfg.ssm.expand * d
+            n_heads = d_in // cfg.ssm.head_dim
+            state = cfg.num_layers * gb * (
+                n_heads * cfg.ssm.d_state * cfg.ssm.head_dim
+                + (cfg.ssm.conv_width - 1) * (d_in + 2 * cfg.ssm.d_state))
+            n_groups = cfg.num_layers // cfg.attn_every
+            _, n_kv = cfg.tp_heads(tp)
+            state += n_groups * gb * n_kv * seq * cfg.head_dim / tp * 2
+        cache_io = 2 * state * dtype_bytes / max(n_chips / tp, 1)
+    else:
+        _, n_kv = cfg.tp_heads(tp)
+        kv = cfg.num_layers * gb * n_kv * seq * cfg.head_dim * 2
+        # read the whole (chip-resident) cache slice + write one slot
+        cache_io = kv * dtype_bytes / n_chips
+    return p_chip + cache_io + 2 * gb * d * cfg.num_layers * dtype_bytes
+
+
+# ------------------------------------------------------------- roofline
+HW = {
+    "peak_flops_bf16": 197e12,     # TPU v5e per chip
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link
+}
+
+
+def roofline_terms(global_flops: float, global_major_bytes: float,
+                   per_dev_collective_bytes: float, n_chips: int,
+                   model_flops: float) -> dict:
+    compute_s = global_flops / n_chips / HW["peak_flops_bf16"]
+    memory_s = global_major_bytes / n_chips / HW["hbm_bw"]
+    coll_s = per_dev_collective_bytes / HW["ici_bw"]
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    step_s = max(compute_s, memory_s, coll_s)
+    mfu = (model_flops / n_chips / HW["peak_flops_bf16"]) / step_s \
+        if step_s > 0 else 0.0
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / global_flops if global_flops else 0.0,
+        "roofline_mfu": mfu,
+    }

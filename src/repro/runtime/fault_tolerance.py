@@ -1,0 +1,115 @@
+"""Fault tolerance & elasticity runtime (host-side control plane).
+
+At 1000+ nodes the failure model is: hosts die, hosts straggle, and the
+job must (a) never lose more than checkpoint_interval steps, (b) detect and
+route around stragglers, (c) restart on a DIFFERENT device count without
+manual intervention. The pieces:
+
+``StepGuard``     — wraps the train step with retry-on-transient-failure and
+                    wall-time watchdog; classifies exceptions (preemption vs
+                    poison step) so a deterministic NaN doesn't retry forever.
+``Heartbeat``     — per-host step-time EMA; quorum straggler detection (a
+                    host slower than median * threshold for N consecutive
+                    steps is flagged for eviction — on real fleets this feeds
+                    the cluster scheduler; here it feeds logs + the elastic
+                    re-mesh hook).
+``elastic_mesh``  — mesh shapes as a function of the LIVE host count:
+                    checkpoint save/restore is mesh-independent
+                    (repro.checkpoint), so recovery is: detect -> rebuild
+                    mesh from survivors -> restore -> continue.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+
+class PoisonStep(Exception):
+    """Deterministic failure (NaN loss, assertion) — do NOT retry."""
+
+
+@dataclass
+class StepGuard:
+    max_retries: int = 3
+    backoff_s: float = 1.0
+
+    def run(self, step_fn, *args):
+        """Run step_fn; retry transient failures with backoff; re-raise
+        deterministic poison immediately."""
+        last = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                out = step_fn(*args)
+                return out
+            except PoisonStep:
+                raise
+            except (jax.errors.JaxRuntimeError, RuntimeError, OSError) as e:
+                last = e
+                if attempt < self.max_retries:
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        raise RuntimeError(
+            f"step failed after {self.max_retries + 1} attempts") from last
+
+
+@dataclass
+class Heartbeat:
+    """Step-time tracking + straggler flagging (host-local view of the
+    fleet; on multi-host deployments the timings are all-gathered through
+    the coordination service once per interval)."""
+    threshold: float = 1.5
+    patience: int = 5
+    ema_alpha: float = 0.2
+    _ema: dict = field(default_factory=dict)
+    _strikes: dict = field(default_factory=dict)
+
+    def record(self, host_id: int, step_time_s: float) -> None:
+        prev = self._ema.get(host_id, step_time_s)
+        self._ema[host_id] = (1 - self.ema_alpha) * prev \
+            + self.ema_alpha * step_time_s
+
+    def stragglers(self) -> list[int]:
+        if len(self._ema) < 2:
+            return []
+        times = sorted(self._ema.values())
+        median = times[len(times) // 2]
+        out = []
+        for host, t in self._ema.items():
+            if t > self.threshold * median:
+                self._strikes[host] = self._strikes.get(host, 0) + 1
+                if self._strikes[host] >= self.patience:
+                    out.append(host)
+            else:
+                self._strikes[host] = 0
+        return out
+
+
+def elastic_mesh(n_devices: int, model_parallel: int = 16,
+                 pod_size: int = 256):
+    """Best mesh for the LIVE device count (survivor set after failures).
+
+    Keeps TP fixed (=16: weights are sharded that way and resharding TP is
+    the expensive path) and absorbs device loss in the data/pod axes —
+    standard elastic-DP. n_devices must be a multiple of model_parallel."""
+    if n_devices % model_parallel:
+        raise ValueError(f"{n_devices} devices not divisible by "
+                         f"TP={model_parallel}")
+    rest = n_devices // model_parallel
+    if n_devices > pod_size and rest % (pod_size // model_parallel) == 0:
+        pods = n_devices // pod_size
+        data = pod_size // model_parallel
+        return jax.make_mesh((pods, data, model_parallel),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((rest, model_parallel), ("data", "model"))
+
+
+def scaled_global_batch(base_batch: int, base_hosts: int,
+                        live_hosts: int, keep_global: bool = True) -> int:
+    """Elastic batch policy: keep the global batch (per-host batch grows) or
+    scale it with the fleet (exact per-host batch, LR rescaled by caller)."""
+    if keep_global:
+        per = math.ceil(base_batch / live_hosts)
+        return per * live_hosts
+    return (base_batch // base_hosts) * live_hosts

@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
+# must see the real single CPU device. Multi-device tests spawn subprocesses
+# (see tests/test_distributed.py) so the 512-device dry-run env never leaks.
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    from repro.data.corpus import make_corpus
+    return make_corpus(vocab_size=512, embed_dim=32, n_docs=64, n_queries=3,
+                       seed=7)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

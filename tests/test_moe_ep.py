@@ -1,0 +1,56 @@
+"""Expert-parallel (shard_map) MoE == single-device MoE, numerically.
+
+Subtlety tested: EP computes ranks/capacity PER DATA SHARD (capacity
+C_loc = C_global / n_shards), so with a balanced router and divisible
+shapes the kept-token set matches the global computation; we verify the
+full outputs agree on a small mesh against the pjit/single-device layer.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(__file__))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.models.moe import init_moe, moe_apply, moe_apply_ep
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    jax.set_mesh(mesh)
+    e, d, ff, k = 8, 32, 16, 2
+    p = init_moe(jax.random.PRNGKey(0), d, ff, e, 1, k, tp=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, d)) * 0.5
+
+    # topk router: per-token stateless -> local == global routing decisions.
+    # (The sinkhorn router INTENTIONALLY differs: it balances over the token
+    # set it sees — per data shard in EP, the scalable semantics — so exact
+    # equivalence is only defined for stateless routers.)
+    # generous capacity so neither path drops tokens -> exact agreement
+    ref, aux_ref = moe_apply(p, x, k, "topk", capacity_factor=8.0)
+    with mesh:
+        out, aux = jax.jit(lambda p, x: moe_apply_ep(
+            p, x, k, "topk", 8.0, 6, e, mesh, ("data",), "model"))(p, x)
+    err = float(jnp.abs(out - ref).max())
+    scale = float(jnp.abs(ref).max())
+    assert err < 5e-5 * max(scale, 1.0), (err, scale)
+    # aux: EP averages per-shard switch losses; reference is global — equal
+    # in expectation, compare loosely
+    assert abs(float(aux) - float(aux_ref)) < 0.3
+    print("MOE_EP_OK", err)
+""")
+
+
+@pytest.mark.slow
+def test_ep_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env, cwd=ROOT,
+                         capture_output=True, text=True, timeout=600)
+    assert "MOE_EP_OK" in res.stdout, res.stdout + res.stderr

@@ -1,0 +1,133 @@
+"""Property-based tests on the system's mathematical invariants.
+
+The paper (§2, citing Cuturi'13) claims the Sinkhorn distance is symmetric,
+satisfies the triangle inequality, and approaches exact EMD for large lam.
+These are checkable invariants of OUR implementation — hypothesis sweeps
+random corpora."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import one_to_many, select_support
+from repro.core.sparse import PaddedDocs, padded_docs_from_lists
+from repro.data.corpus import make_corpus
+
+
+def _doc_as_query(docs: PaddedDocs, j: int, vocab: int) -> np.ndarray:
+    q = np.zeros(vocab, np.float32)
+    idx = np.asarray(docs.idx[j])
+    val = np.asarray(docs.val[j])
+    q[idx[val > 0]] = val[val > 0]
+    return q
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_symmetry(seed):
+    """WMD(a, b) == WMD(b, a) (the OT objective is symmetric in the
+    marginals when M is symmetric)."""
+    corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=4, n_queries=0,
+                       seed=seed)
+    qa = _doc_as_query(corp.docs, 0, 256)
+    qb = _doc_as_query(corp.docs, 1, 256)
+    dab = float(one_to_many(qa, corp.docs, corp.vecs, lam=20.0, n_iter=300,
+                            impl="dense_stabilized")[1])
+    dba = float(one_to_many(qb, corp.docs, corp.vecs, lam=20.0, n_iter=300,
+                            impl="dense_stabilized")[0])
+    assert abs(dab - dba) < 5e-3 * max(dab, 1.0), (dab, dba)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_triangle_inequality(seed):
+    """d(a,c) <= d(a,b) + d(b,c) + eps (paper §2: Sinkhorn distance is a
+    metric for large enough entropy)."""
+    corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=3, n_queries=0,
+                       seed=seed + 77)
+    q = [_doc_as_query(corp.docs, j, 256) for j in range(3)]
+    d = lambda i, j: float(one_to_many(q[i], corp.docs, corp.vecs, lam=30.0,
+                                       n_iter=400,
+                                       impl="dense_stabilized")[j])
+    dac, dab, dbc = d(0, 2), d(0, 1), d(1, 2)
+    assert dac <= dab + dbc + 1e-2, (dac, dab, dbc)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(0.25, 4.0))
+def test_scale_equivariance(seed, scale):
+    """Scaling embeddings by c scales WMD by c (with lam rescaled by 1/c:
+    the transport plan is invariant, the cost is linear in M)."""
+    corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=8, n_queries=1,
+                       seed=seed)
+    q = corp.queries[0]
+    d1 = np.asarray(one_to_many(q, corp.docs, corp.vecs, lam=8.0,
+                                n_iter=200, impl="sparse"))
+    d2 = np.asarray(one_to_many(q, corp.docs, corp.vecs * scale,
+                                lam=8.0 / scale, n_iter=200, impl="sparse"))
+    np.testing.assert_allclose(d2, d1 * scale, rtol=2e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_doc_permutation_equivariance(seed):
+    rng = np.random.default_rng(seed)
+    corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=16, n_queries=1,
+                       seed=seed)
+    q = corp.queries[0]
+    perm = rng.permutation(16)
+    shuffled = PaddedDocs(idx=corp.docs.idx[perm], val=corp.docs.val[perm])
+    d1 = np.asarray(one_to_many(q, corp.docs, corp.vecs, lam=8.0, n_iter=60,
+                                impl="sparse"))
+    d2 = np.asarray(one_to_many(q, shuffled, corp.vecs, lam=8.0, n_iter=60,
+                                impl="sparse"))
+    np.testing.assert_allclose(d2, d1[perm], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), lam=st.floats(2.0, 12.0))
+def test_padding_invariance(seed, lam):
+    """Extra ELL padding slots (val == 0) never change distances."""
+    corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=8, n_queries=1,
+                       seed=seed)
+    q = corp.queries[0]
+    d1 = np.asarray(one_to_many(q, corp.docs, corp.vecs, lam=lam, n_iter=40,
+                                impl="sparse"))
+    L = corp.docs.max_words
+    padded = PaddedDocs(
+        idx=jnp.pad(corp.docs.idx, ((0, 0), (0, 7))),
+        val=jnp.pad(corp.docs.val, ((0, 0), (0, 7))))
+    d2 = np.asarray(one_to_many(q, padded, corp.vecs, lam=lam, n_iter=40,
+                                impl="sparse"))
+    np.testing.assert_allclose(d2, d1, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(2, 6),
+       e=st.sampled_from([4, 8, 16]))
+def test_sinkhorn_router_marginals(seed, t, e):
+    """Row sums == 1; column loads ~uniform — for ANY logits."""
+    import jax
+    from repro.core.router import sinkhorn_route
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t * 32, e)) * 5.0
+    p = np.asarray(sinkhorn_route(logits, n_iter=12))
+    np.testing.assert_allclose(p.sum(1), 1.0, atol=1e-4)
+    col = p.sum(0)
+    assert col.max() / col.mean() < 1.05, col
+
+
+def test_two_level_scan_matches_flat():
+    """sqrt-remat grouping is numerically identical to the flat stack."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import transformer as T
+    cfg = get_config("granite_3_2b").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, num_layers=7)      # g*k + rem = 2*3 + 1
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    h_remat, _ = T.forward(cfg, params, tokens, remat=True)
+    h_plain, _ = T.forward(cfg, params, tokens, remat=False)
+    np.testing.assert_allclose(np.asarray(h_remat), np.asarray(h_plain),
+                               rtol=1e-5, atol=1e-5)

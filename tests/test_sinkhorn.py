@@ -1,0 +1,130 @@
+"""Core solver behaviour: faithfulness to the paper's Algorithm 1 and to
+exact optimal transport."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (one_to_many, select_support, padded_docs_to_dense,
+                        IMPLS)
+from repro.core.exact_ot import exact_emd
+from repro.core.sinkhorn import cdist
+from repro.data.corpus import make_corpus
+
+LAM, N_ITER = 9.0, 40
+
+
+@pytest.mark.parametrize("impl", ["sparse", "sparse_unfused", "kernel"])
+def test_sparse_impls_match_dense(small_corpus, impl):
+    """Paper §4: the sparse transformation computes the SAME distances."""
+    q = small_corpus.queries[0]
+    ref = one_to_many(q, small_corpus.docs, small_corpus.vecs, LAM, N_ITER,
+                      impl="dense")
+    got = one_to_many(q, small_corpus.docs, small_corpus.vecs, LAM, N_ITER,
+                      impl=impl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_stabilized_matches_dense(small_corpus):
+    """In the fp32-safe regime (lam*max(M) well below -log(fp32 tiny) ~ 87)
+    the log-domain and scaling-vector iterations agree."""
+    q = small_corpus.queries[1]
+    ref = one_to_many(q, small_corpus.docs, small_corpus.vecs, 4.0, 800,
+                      impl="dense")
+    got = one_to_many(q, small_corpus.docs, small_corpus.vecs, 4.0, 800,
+                      impl="dense_stabilized")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_dense_fp32_underflow_vs_stabilized():
+    """Beyond-paper finding: the paper's scaling-vector iteration silently
+    loses accuracy in fp32 once lam*M ~ 80 (K = exp(-lam*M) underflows);
+    the log-domain variant stays within a few permil of the exact LP.
+    (The paper ran fp64 on CPU and never hits this; TPU fp32 does.)"""
+    corp = make_corpus(vocab_size=512, embed_dim=32, n_docs=64, n_queries=3,
+                       seed=7)
+    q = corp.queries[1]
+    r, vecs_sel, _ = select_support(q, corp.vecs)
+    m = np.asarray(cdist(vecs_sel, jnp.asarray(corp.vecs)))
+    c_dense = padded_docs_to_dense(corp.docs, 512)
+    dd = np.asarray(one_to_many(q, corp.docs, corp.vecs, 9.0, 800,
+                                impl="dense"))
+    ds = np.asarray(one_to_many(q, corp.docs, corp.vecs, 9.0, 800,
+                                impl="dense_stabilized"))
+    j = int(np.argmax(np.abs(dd - ds)))
+    col = c_dense[:, j]
+    sel = np.nonzero(col > 0)[0]
+    exact = exact_emd(np.asarray(r), col[sel], m[:, sel])
+    # stabilized is near the LP optimum; plain fp32 dense is measurably off
+    assert abs(ds[j] - exact) / exact < 5e-3
+    assert abs(dd[j] - exact) / exact > 1e-2
+
+
+def test_matches_exact_ot():
+    """Cuturi'13 / paper §2: Sinkhorn distance -> exact EMD as lam grows."""
+    corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=8, n_queries=1,
+                       seed=11)
+    q = corp.queries[0]
+    r, vecs_sel, _ = select_support(q, corp.vecs)
+    m = np.asarray(cdist(vecs_sel, jnp.asarray(corp.vecs)))
+    c_dense = padded_docs_to_dense(corp.docs, 256)
+    approx = np.asarray(one_to_many(q, corp.docs, corp.vecs, lam=40.0,
+                                    n_iter=400, impl="dense_stabilized"))
+    for j in range(c_dense.shape[1]):
+        col = c_dense[:, j]
+        sel = np.nonzero(col > 0)[0]
+        exact = exact_emd(np.asarray(r), col[sel], m[:, sel])
+        assert abs(approx[j] - exact) / exact < 5e-3, (j, approx[j], exact)
+
+
+def test_sinkhorn_upper_bounds_emd():
+    """Entropic penalty => Sinkhorn cost >= exact transport cost."""
+    corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=6, n_queries=1,
+                       seed=13)
+    q = corp.queries[0]
+    r, vecs_sel, _ = select_support(q, corp.vecs)
+    m = np.asarray(cdist(vecs_sel, jnp.asarray(corp.vecs)))
+    c_dense = padded_docs_to_dense(corp.docs, 256)
+    approx = np.asarray(one_to_many(q, corp.docs, corp.vecs, lam=10.0,
+                                    n_iter=300, impl="dense_stabilized"))
+    for j in range(c_dense.shape[1]):
+        col = c_dense[:, j]
+        sel = np.nonzero(col > 0)[0]
+        exact = exact_emd(np.asarray(r), col[sel], m[:, sel])
+        assert approx[j] >= exact - 1e-3
+
+
+def test_identical_documents_near_zero():
+    """WMD(doc, doc) ~ 0: moving a distribution onto itself costs ~nothing."""
+    corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=4, n_queries=1,
+                       seed=5)
+    # build a query equal to target doc 0
+    idx = np.asarray(corp.docs.idx[0])
+    val = np.asarray(corp.docs.val[0])
+    q = np.zeros(256, dtype=np.float32)
+    q[idx[val > 0]] = val[val > 0]
+    d = np.asarray(one_to_many(q, corp.docs, corp.vecs, lam=40.0, n_iter=400,
+                               impl="dense_stabilized"))
+    others = np.delete(d, 0)
+    assert d[0] < 0.05 * others.min(), (d[0], others.min())
+
+
+def test_more_iterations_converge(small_corpus):
+    q = small_corpus.queries[2]
+    runs = [np.asarray(one_to_many(q, small_corpus.docs, small_corpus.vecs,
+                                   4.0, it, impl="sparse"))
+            for it in (50, 100, 200, 400)]
+    d1 = np.abs(runs[1] - runs[0]).max()
+    d2 = np.abs(runs[2] - runs[1]).max()
+    d3 = np.abs(runs[3] - runs[2]).max()
+    assert d3 <= d2 <= d1 + 1e-5    # geometric contraction
+    assert d3 < 0.5 * d1            # and materially so
+
+
+def test_wmd_positive_and_finite(small_corpus):
+    for q in small_corpus.queries:
+        d = np.asarray(one_to_many(q, small_corpus.docs, small_corpus.vecs,
+                                   LAM, N_ITER, impl="sparse"))
+        assert np.all(np.isfinite(d))
+        assert np.all(d > 0)
