@@ -1,9 +1,14 @@
 """Benchmark runner — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (paper mapping in each module doc).
+``--json PATH`` additionally writes a ``{bench_name: usec}`` record file
+(e.g. ``--json BENCH_fig6.json``) for the bench trajectory; ``--only`` runs
+a subset of modules.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
@@ -21,15 +26,40 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write {bench: usec} JSON records to PATH")
+    ap.add_argument("--only", nargs="+", default=None,
+                    choices=[name for name, _ in MODULES],
+                    help="run only these modules")
+    args = ap.parse_args(argv)
+
+    records: dict[str, float] = {}
+
+    def out(line: str) -> None:
+        print(line)
+        parts = str(line).split(",")
+        if len(parts) >= 2:
+            try:
+                records[parts[0]] = float(parts[1])
+            except ValueError:
+                pass
+
     print("name,us_per_call,derived")
     failures = []
     for name, mod in MODULES:
+        if args.only is not None and name not in args.only:
+            continue
         try:
-            mod.main(out=print)
+            mod.main(out=out)
         except Exception:
             failures.append(name)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=2, sort_keys=True)
+        print(f"wrote {len(records)} records to {args.json}", file=sys.stderr)
     if failures:
         print(f"FAILED: {failures}", file=sys.stderr)
         sys.exit(1)

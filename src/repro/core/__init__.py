@@ -1,7 +1,10 @@
 """Core library: the paper's contribution as composable JAX modules."""
+from .index import (CorpusIndex, DocGroup, WmdEngine, bucket_size,
+                    build_index)
 from .sinkhorn import (cdist, precompute, select_support, sinkhorn_wmd_dense,
                        sinkhorn_wmd_dense_stabilized)
-from .sinkhorn_sparse import (precompute_sparse, sinkhorn_wmd_sparse,
+from .sinkhorn_sparse import (precompute_sparse, reconstruct_gm,
+                              sinkhorn_wmd_sparse,
                               sinkhorn_wmd_sparse_unfused)
 from .sparse import (BlockSparse, PaddedDocs, block_density,
                      block_sparse_from_dense, padded_docs_from_dense,
@@ -10,8 +13,9 @@ from .wmd import IMPLS, many_to_many, one_to_many
 from .router import route, sinkhorn_route, topk_route
 
 __all__ = [
+    "CorpusIndex", "DocGroup", "WmdEngine", "bucket_size", "build_index",
     "cdist", "precompute", "select_support", "sinkhorn_wmd_dense",
-    "sinkhorn_wmd_dense_stabilized", "precompute_sparse",
+    "sinkhorn_wmd_dense_stabilized", "precompute_sparse", "reconstruct_gm",
     "sinkhorn_wmd_sparse", "sinkhorn_wmd_sparse_unfused", "BlockSparse",
     "PaddedDocs", "block_density", "block_sparse_from_dense",
     "padded_docs_from_dense", "padded_docs_from_lists",

@@ -33,7 +33,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .sinkhorn import cdist
+from .sinkhorn_sparse import reconstruct_gm
 from .sparse import PaddedDocs
+
+
+# jax >= 0.5 requires marking shard-varying scan carries with lax.pvary;
+# on older jax (no varying-manual-axes type system) identity is correct.
+_pvary = getattr(lax, "pvary", lambda x, axes: x)
 
 
 def _doc_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -73,7 +79,7 @@ def sinkhorn_wmd_dense_distributed(r, vecs_sel, vecs, c, lam: float,
         v_r = r.shape[0]
         n_loc = c_loc.shape[1]
         x = jnp.full((v_r, n_loc), 1.0 / v_r, dtype=k.dtype)
-        x = lax.pvary(x, tuple(data_axes))  # carry varies over doc shards
+        x = _pvary(x, tuple(data_axes))  # carry varies over doc shards
 
         def body(x, _):
             u = 1.0 / x
@@ -107,7 +113,10 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     over ``model`` (each chip owns V/model_size vocab columns), each chip
     gathers the columns it owns for *its* docs and one psum over ``model``
     assembles G — cutting precompute FLOPs/chip by the model-axis size at
-    the cost of a single (3, v_r, N_loc, L) all-reduce before the loop.
+    the cost of a single (v_r, N_loc, L) all-reduce before the loop. (GM is
+    reconstructed from G after the collective — each ELL entry is owned by
+    exactly one vocab shard, so the scattered G is exact — which halves the
+    assembly traffic versus shipping G and GM.)
     """
     doc_axes = _doc_axes(mesh)
     docs_spec = P(doc_axes)
@@ -122,8 +131,7 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
             m = cdist(vecs_sel, vecs_full)                 # replicated (v_r, V)
             k = jnp.exp(-lam * m)
             g = jnp.take(k, idx_loc, axis=1)
-            gm = jnp.take(k * m, idx_loc, axis=1)
-            return _ell_loop(r, g, gm, val_loc, n_iter, doc_axes)
+            return _ell_loop(r, g, val_loc, lam, n_iter, doc_axes)
 
         return run(r, vecs_sel, vecs, docs.idx, docs.val)
 
@@ -148,25 +156,23 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
         lo = midx * v_loc_size
         m = cdist(vecs_sel, vecs_loc)                      # (v_r, V_loc)
         k = jnp.exp(-lam * m)
-        km = k * m
         # gather only ids this chip owns; others contribute zeros to the sum
         rel = idx_loc - lo
         mine = (rel >= 0) & (rel < v_loc_size)
         rel = jnp.where(mine, rel, 0)
         g = jnp.where(mine[None], jnp.take(k, rel, axis=1), 0.0)
-        gm = jnp.where(mine[None], jnp.take(km, rel, axis=1), 0.0)
-        # assemble + redistribute docs over the model axis in one collective
+        # assemble + redistribute docs over the model axis in one collective;
+        # GM is rebuilt from the assembled G, so it never crosses the wire
         g = lax.psum_scatter(g, "model", scatter_dimension=1, tiled=True)
-        gm = lax.psum_scatter(gm, "model", scatter_dimension=1, tiled=True)
         n_slice = val_loc.shape[0] // n_model
         val_my = lax.dynamic_slice_in_dim(val_loc, midx * n_slice, n_slice, 0)
-        return _ell_loop(r, g, gm, val_my, n_iter,
+        return _ell_loop(r, g, val_my, lam, n_iter,
                          data_axes + ("model",))
 
     return run(r, vecs_sel, vecs, docs.idx, docs.val)
 
 
-def _ell_loop(r, g, gm, val, n_iter, vary_axes=()):
+def _ell_loop(r, g, val, lam, n_iter, vary_axes=()):
     """The collective-free fused SDDMM_SpMM iteration (per shard)."""
     v_r = g.shape[0]
     n_loc = g.shape[1]
@@ -174,7 +180,7 @@ def _ell_loop(r, g, gm, val, n_iter, vary_axes=()):
     live = val > 0
     x = jnp.full((v_r, n_loc), 1.0 / v_r, dtype=g.dtype)
     if vary_axes:
-        x = lax.pvary(x, tuple(vary_axes))  # match shard-varying carry type
+        x = _pvary(x, tuple(vary_axes))  # match shard-varying carry type
 
     def body(x, _):
         u = 1.0 / x
@@ -187,7 +193,7 @@ def _ell_loop(r, g, gm, val, n_iter, vary_axes=()):
     u = 1.0 / x
     t = jnp.einsum("knl,kn->nl", g, u)
     w = jnp.where(live, val / t, 0.0)
-    return jnp.einsum("kn,knl,nl->n", u, gm, w)
+    return jnp.einsum("kn,knl,nl->n", u, reconstruct_gm(g, lam), w)
 
 
 def sharded_inputs(mesh: Mesh, r, vecs_sel, vecs, docs: PaddedDocs,

@@ -1,0 +1,338 @@
+"""Batched multi-query WMD engine: persistent corpus index + bucketed solves.
+
+The paper's motivating scenario ("finding whether a given tweet is similar to
+any other tweets happened in a day") is *many* queries against one shared
+corpus, but a per-query loop over :func:`repro.core.wmd.one_to_many` re-ships
+the vocabulary embeddings to the device, re-reduces their norms, and re-jits
+for every distinct query support size ``v_r`` — the naive-baseline shape the
+paper gets its 700x over. This module keeps the corpus side *resident* and
+batches the query side:
+
+``CorpusIndex``
+    Freezes everything query-independent exactly once: the ELL document
+    collection (``docs.idx/val``), the vocabulary embeddings, and the
+    per-word squared norms that form the corpus half of the ``cdist`` GEMM.
+    Documents are also nnz-sorted and split into width-trimmed
+    :class:`DocGroup` slices (ELL row grouping), so the per-query solve
+    never touches padding slots shorter docs don't have — a one-time cost
+    at build that every subsequent query amortizes. Every query after the
+    first touches none of this again.
+
+``WmdEngine``
+    Shape-buckets incoming queries to a small set of power-of-two ``v_r``
+    sizes (padded query rows carry ``r = 1, G = 0`` — the established
+    padding contract of :mod:`repro.kernels.sddmm_spmm`, proven inert by the
+    kernel tests), stacks each bucket into one ``(Q, v_r, ...)`` problem and
+    runs the solver ONCE per bucket: the per-query ``(v_r, V)`` cdist
+    becomes a single ``(Q*v_r, V)`` GEMM, the Sinkhorn loop runs as one
+    batched einsum or one Pallas launch with a query grid dimension
+    (:func:`repro.kernels.sddmm_spmm.sinkhorn_fused_all_batched`), and jit
+    caching collapses to one executable per bucket shape instead of one per
+    distinct ``v_r``. GM is reconstructed from G everywhere (never
+    materialized), so the per-bucket footprint is two nnz-sized arrays.
+
+Typical use::
+
+    index = build_index(corpus.docs, corpus.vecs)
+    engine = WmdEngine(index, lam=9.0, n_iter=15, impl="sparse")
+    dists = engine.query_batch(queries)        # (Q, N)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .sinkhorn_sparse import reconstruct_gm
+from .sparse import PaddedDocs
+
+ENGINE_IMPLS = ("sparse", "kernel")
+
+
+class DocGroup(NamedTuple):
+    """One length-homogeneous slice of the corpus, ELL-trimmed to its own
+    max word count (classic ELL row-grouping: the solver never multiplies
+    padding slots a shorter doc group doesn't have)."""
+
+    docs: PaddedDocs    # idx/val (N_g, L_g), L_g = group max words
+    cols: jax.Array     # (N_g,) original doc positions (for reassembly)
+
+
+class CorpusIndex(NamedTuple):
+    """Query-independent corpus state, frozen once and reused forever."""
+
+    docs: PaddedDocs    # full ELL corpus: idx (N, L) int32, val (N, L)
+    groups: tuple       # tuple[DocGroup, ...] — nnz-sorted, width-trimmed
+    vecs: jax.Array     # (V, w) vocabulary embeddings, device-resident
+    vecs_sq: jax.Array  # (V,) per-word |b|^2 — corpus half of the cdist GEMM
+
+    @property
+    def n_docs(self) -> int:
+        return self.docs.idx.shape[0]
+
+    @property
+    def vocab_size(self) -> int:
+        return self.vecs.shape[0]
+
+    @property
+    def embed_dim(self) -> int:
+        return self.vecs.shape[1]
+
+
+def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
+                doc_groups: int = 4) -> CorpusIndex:
+    """Freeze the corpus side: device-resident docs + embeddings + norms.
+
+    Documents are additionally sorted by nnz and split into ``doc_groups``
+    equal-count groups, each trimmed to its own max word count — the
+    per-query solve work drops by the corpus' ELL padding fraction, paid
+    once here instead of on every query.
+    """
+    vecs = jnp.asarray(vecs, dtype)
+    idx_np = np.asarray(docs.idx, np.int32)
+    val_np = np.asarray(docs.val, dtype)
+    # compact live slots to the front (front-filled is the builders'
+    # contract, but cheap to enforce for arbitrary PaddedDocs inputs)
+    slot_order = np.argsort(~(val_np > 0), axis=1, kind="stable")
+    idx_np = np.take_along_axis(idx_np, slot_order, 1)
+    val_np = np.take_along_axis(val_np, slot_order, 1)
+    nnz = (val_np > 0).sum(1)
+    order = np.argsort(nnz, kind="stable")
+    n = max(1, len(order))
+    gsz = -(-n // max(1, doc_groups))
+    groups = []
+    for lo in range(0, len(order), gsz):
+        sel = order[lo:lo + gsz]
+        lg = max(1, int(nnz[sel].max(initial=0)))
+        groups.append(DocGroup(
+            docs=PaddedDocs(idx=jnp.asarray(idx_np[sel][:, :lg]),
+                            val=jnp.asarray(val_np[sel][:, :lg])),
+            cols=jnp.asarray(sel.astype(np.int32))))
+    return CorpusIndex(docs=PaddedDocs(idx=jnp.asarray(idx_np),
+                                       val=jnp.asarray(val_np)),
+                       groups=tuple(groups), vecs=vecs,
+                       vecs_sq=jnp.sum(vecs * vecs, axis=1))
+
+
+def bucket_size(v_r: int, min_bucket: int = 8) -> int:
+    """Smallest power-of-two bucket (>= min_bucket) holding v_r query rows."""
+    b = max(1, int(min_bucket))
+    while b < v_r:
+        b *= 2
+    return b
+
+
+def _safe_inv(x):
+    return jnp.where(x > 0, 1.0 / jnp.where(x > 0, x, 1.0), 0.0)
+
+
+def _solve_batched_einsum(g, val, r, mask, lam, n_iter):
+    """Batched ELL Sinkhorn + distance line in the CPU/XLA-friendly layout.
+
+    g (Q, N, L, B): query rows on the MINOR axis, so both contractions are
+    contiguous per-(doc, query) tiles — measured ~4x faster per live row
+    than the (Q, B, N, L) order whose k-reduction strides by N*L. Only ONE
+    G tensor is kept: diag(1/r) is folded into the x-update (r is constant
+    per row) instead of materializing G_over_r, halving resident bytes.
+    val (N, L); r, mask (Q, B); padded rows (G == 0, r == 1) are inert.
+    Returns wmd (Q, N).
+    """
+    q, n, length, b = g.shape
+    live = val > 0                                      # (N, L)
+    rinv = _safe_inv(r)[:, None, :]                     # (Q, 1, B)
+    denom = jnp.sum(mask, axis=1, keepdims=True)
+    x0 = jnp.where(mask > 0, 1.0 / jnp.maximum(denom, 1.0), 0.0)
+    x = jnp.broadcast_to(x0[:, None, :], (q, n, b))
+
+    # pad rows keep x == 0 exactly (their G is 0), so a single x > 0 guard
+    # on u suffices — the untaken 1/0 branch yields inf which the select
+    # discards; live-entry arithmetic matches the per-query oracle's.
+    def body(x, _):
+        u = jnp.where(x > 0, 1.0 / x, 0.0)
+        t = jnp.einsum("qnlb,qnb->qnl", g, u)           # SDDMM
+        w = jnp.where(live[None], val[None] / t, 0.0)
+        x = jnp.einsum("qnlb,qnl->qnb", g, w) * rinv    # SpMM (fused)
+        return x, None
+
+    x, _ = lax.scan(body, x, None, length=n_iter)
+    u = jnp.where(x > 0, 1.0 / x, 0.0)
+    t = jnp.einsum("qnlb,qnb->qnl", g, u)
+    w = jnp.where(live[None], val[None] / t, 0.0)
+    return jnp.einsum("qnb,qnlb,qnl->qn", u, reconstruct_gm(g, lam), w)
+
+
+@functools.partial(jax.jit, static_argnames=("lam",))
+def _compute_kq(sup: jax.Array, mask: jax.Array, vecs: jax.Array,
+                vecs_sq: jax.Array, lam: float) -> jax.Array:
+    """Stacked cdist GEMM -> K for one query chunk: (Q, B) ids -> (Q, V, B).
+
+    One (V, Q*B) GEMM replaces Q separate (v_r, V) cdists. The TRANSPOSED
+    orientation makes the subsequent doc-word gathers copy contiguous rows
+    instead of striding over the vocab axis; the reorder to (Q, V, B)
+    happens on this SMALL matrix, never on the Q*N*L*B gather output.
+    Padded rows (mask == 0) come out as all-zero K columns (G == 0).
+    """
+    q, b = sup.shape
+    a = jnp.take(vecs, sup, axis=0)                     # (Q, B, w)
+    a2 = jnp.sum(a * a, axis=-1)                        # (Q, B)
+    ab = vecs @ a.reshape(q * b, -1).T                  # (V, Q*B)
+    d2 = jnp.maximum(vecs_sq[:, None] + a2.reshape(1, -1) - 2.0 * ab, 0.0)
+    kt = jnp.exp(-lam * jnp.sqrt(d2)) * mask.reshape(1, -1)
+    return jnp.transpose(kt.reshape(-1, q, b), (1, 0, 2))    # (Q, V, B)
+
+
+@functools.partial(jax.jit, static_argnames=("layout",))
+def _gather_g(kq: jax.Array, idx: jax.Array, layout: str = "qnlb"):
+    """Gather doc-word columns of K: (Q, V, B) x (N, L) -> G.
+
+    Kept as its own jit (with :func:`_compute_kq` separate too): XLA CPU
+    otherwise fuses the exp/sqrt producer INTO the gather and recomputes it
+    per gathered element (~2.4x slower end to end); on TPU the boundary is
+    where the engine hands off to the Mosaic kernel anyway.
+    """
+    if layout == "qbnl":
+        # TPU tile layout: (v_r, block_n, L) per query, sublane = query rows
+        return jnp.take(jnp.transpose(kq, (0, 2, 1)), idx, axis=2)
+    return jnp.take(kq, idx, axis=1)                         # (Q, N, L, B)
+
+
+_solve_gathered = jax.jit(_solve_batched_einsum,
+                          static_argnames=("lam", "n_iter"))
+
+
+def _prepare_query(q, bucket: int, dtype):
+    """Host-side support selection + bucket padding for one query row."""
+    q = np.asarray(q, dtype=np.float64).reshape(-1)
+    idx = np.nonzero(q > 0)[0]
+    v_r = idx.size
+    if v_r > bucket:
+        raise ValueError(f"query v_r={v_r} exceeds bucket {bucket}")
+    sup = np.zeros(bucket, np.int32)
+    sup[:v_r] = idx
+    r = np.ones(bucket, dtype)                # pad rows carry r == 1
+    r[:v_r] = (q[idx] / q[idx].sum()).astype(dtype)
+    mask = np.zeros(bucket, dtype)
+    mask[:v_r] = 1.0
+    return sup, r, mask
+
+
+class WmdEngine:
+    """Persistent multi-query WMD engine over a frozen :class:`CorpusIndex`.
+
+    Parameters
+    ----------
+    index:       corpus state from :func:`build_index` (reused across calls)
+    lam, n_iter: Sinkhorn strength / iteration count (static per engine)
+    impl:        "sparse" (batched einsum) or "kernel" (batched Pallas)
+    min_bucket:  smallest v_r bucket; queries are padded up to powers of two
+    max_batch:   per-solve query cap — larger buckets are chunked so the
+                 (Q, B, N, L) gathered tile stays memory-bounded
+    pad_q:       round each chunk's Q up to a power of two with inert all-pad
+                 queries, bounding the set of compiled shapes under serving
+                 traffic (Q buckets x v_r buckets executables total)
+    """
+
+    def __init__(self, index: CorpusIndex, lam: float = 10.0,
+                 n_iter: int = 15, impl: str = "sparse",
+                 min_bucket: int = 8, max_batch: int = 4,
+                 pad_q: bool = True, block_n: int = 128,
+                 interpret: bool | None = None, dtype=jnp.float32):
+        if impl not in ENGINE_IMPLS:
+            raise ValueError(f"impl must be one of {ENGINE_IMPLS}, "
+                             f"got {impl!r}")
+        self.index = index
+        self.lam = float(lam)
+        self.n_iter = int(n_iter)
+        self.impl = impl
+        self.min_bucket = int(min_bucket)
+        self.max_batch = int(max_batch)
+        self.pad_q = bool(pad_q)
+        self.block_n = int(block_n)
+        self.interpret = interpret
+        self.dtype = np.dtype(jnp.dtype(dtype).name)
+
+    def query(self, r_full) -> jax.Array:
+        """WMD from one full-vocab query histogram to every doc: (N,)."""
+        return self.query_batch([r_full])[0]
+
+    def query_batch(self, queries: Sequence) -> jax.Array:
+        """WMD for Q queries (rows of full-vocab histograms) -> (Q, N).
+
+        Queries are grouped into power-of-two v_r buckets and SORTED by v_r
+        inside each bucket; each ``max_batch``-sized chunk is then trimmed to
+        the smallest multiple-of-8 width (the TPU sublane) covering its
+        members. The pow2 buckets bound the executable count, the sort + trim
+        bounds padding waste to < 8 rows per query. Row order of the result
+        matches the input order. A query with no support (all-zero
+        histogram) yields a NaN row — WMD is undefined for an empty
+        marginal — without affecting the other rows.
+        """
+        queries = [np.asarray(q) for q in queries]
+        if not queries:
+            return jnp.zeros((0, self.index.n_docs), self.dtype)
+        vr = [int((q > 0).sum()) for q in queries]
+        buckets: dict[int, list[int]] = {}
+        for qi, q in enumerate(queries):
+            if vr[qi] == 0:
+                continue        # empty marginal: NaN row, never solved
+            buckets.setdefault(bucket_size(vr[qi], self.min_bucket),
+                               []).append(qi)
+
+        # dispatch every chunk before collecting any result: device compute
+        # of chunk i overlaps host prep of chunk i+1
+        pending = []
+        for b in sorted(buckets):
+            members = sorted(buckets[b], key=lambda qi: vr[qi])
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                width = max(8, min(b, -(-max(vr[qi] for qi in chunk) // 8) * 8))
+                parts = self._solve_chunk([queries[qi] for qi in chunk], width)
+                pending.append((chunk, parts))
+        out = np.zeros((len(queries), self.index.n_docs), self.dtype)
+        for qi in range(len(queries)):
+            if vr[qi] == 0:
+                out[qi] = np.nan
+        for chunk, parts in pending:
+            for grp, wmd_g in parts:
+                cols = np.asarray(grp.cols)
+                out[np.ix_(chunk, cols)] = np.asarray(wmd_g)[:len(chunk)]
+        return jnp.asarray(out)
+
+    def _solve_chunk(self, chunk_queries: list, width: int):
+        """Solve one padded chunk against every doc group; returns
+        [(DocGroup, wmd (Qpad, N_g)), ...] (device arrays, not yet synced)."""
+        prepared = [_prepare_query(q, width, self.dtype)
+                    for q in chunk_queries]
+        n_live = len(prepared)
+        q_pad = n_live
+        if self.pad_q:
+            q_pad = 1
+            while q_pad < n_live:
+                q_pad *= 2
+        # inert filler queries: no support (mask 0 -> G rows all 0), r == 1
+        filler = (np.zeros(width, np.int32), np.ones(width, self.dtype),
+                  np.zeros(width, self.dtype))
+        prepared += [filler] * (q_pad - n_live)
+        sup = jnp.asarray(np.stack([p[0] for p in prepared]))
+        r = jnp.asarray(np.stack([p[1] for p in prepared]))
+        mask = jnp.asarray(np.stack([p[2] for p in prepared]))
+        layout = "qbnl" if self.impl == "kernel" else "qnlb"
+        kq = _compute_kq(sup, mask, self.index.vecs, self.index.vecs_sq,
+                         self.lam)
+        parts = []
+        for grp in self.index.groups:
+            g = _gather_g(kq, grp.docs.idx, layout=layout)
+            if self.impl == "kernel":
+                from repro.kernels.ops import sinkhorn_fused_all_batched
+                wmd_g = sinkhorn_fused_all_batched(
+                    g, grp.docs.val, r, self.lam, self.n_iter,
+                    block_n=self.block_n, interpret=self.interpret)
+            else:
+                wmd_g = _solve_gathered(g, grp.docs.val, r, mask, self.lam,
+                                        self.n_iter)
+            parts.append((grp, wmd_g))
+        return parts

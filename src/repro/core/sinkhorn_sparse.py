@@ -33,12 +33,24 @@ from .sparse import PaddedDocs
 
 
 class SparsePrecompute(NamedTuple):
-    """Loop-invariant gathered tiles: everything the iteration touches."""
+    """Loop-invariant gathered tiles: everything the iteration touches.
+
+    Only TWO nnz-sized arrays: the (K*M) gather the distance line needs is
+    reconstructable from G (``GM = -G*log(G)/lam`` since ``G`` holds gathered
+    ``K = exp(-lam*M)`` entries), so it is never materialized — see
+    :func:`reconstruct_gm`.
+    """
 
     G: jax.Array          # (v_r, N, L)  K columns at each doc's words
     G_over_r: jax.Array   # (v_r, N, L)  diag(1/r) G
-    GM: jax.Array         # (v_r, N, L)  (K*M) columns at each doc's words
     val: jax.Array        # (N, L)       normalized frequencies (0 = pad)
+
+
+def reconstruct_gm(G: jax.Array, lam) -> jax.Array:
+    """(K*M) gathered == -G*log(G)/lam; G == 0 entries (padding or exp
+    underflow) map to 0, matching the materialized gather."""
+    safe = jnp.where(G > 0, G, 1.0)
+    return jnp.where(G > 0, -G * jnp.log(safe), 0.0) / lam
 
 
 def precompute_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
@@ -47,9 +59,7 @@ def precompute_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
     M = cdist(vecs_sel, vecs)                    # (v_r, V)
     K = jnp.exp(-lam * M)
     G = jnp.take(K, docs.idx, axis=1)            # (v_r, N, L)
-    GM = jnp.take(K * M, docs.idx, axis=1)
-    return SparsePrecompute(G=G, G_over_r=G / r[:, None, None], GM=GM,
-                            val=docs.val)
+    return SparsePrecompute(G=G, G_over_r=G / r[:, None, None], val=docs.val)
 
 
 def _iterate(pre: SparsePrecompute, n_iter: int) -> jax.Array:
@@ -82,8 +92,9 @@ def sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
     u = 1.0 / x
     t = jnp.einsum("knl,kn->nl", pre.G, u)
     w = jnp.where(pre.val > 0, pre.val / t, 0.0)
-    # wmd[j] = sum_k u[k,j] * sum_l GM[k,j,l] w[j,l]   (paper's final line)
-    return jnp.einsum("kn,knl,nl->n", u, pre.GM, w)
+    # wmd[j] = sum_k u[k,j] * sum_l GM[k,j,l] w[j,l]   (paper's final line);
+    # GM reconstructed from G, never stored
+    return jnp.einsum("kn,knl,nl->n", u, reconstruct_gm(pre.G, lam), w)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iter",))

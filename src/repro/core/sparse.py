@@ -50,17 +50,25 @@ class PaddedDocs(NamedTuple):
 
 def padded_docs_from_dense(c: np.ndarray, max_words: int | None = None,
                            dtype=np.float32) -> PaddedDocs:
-    """Build ELL docs from a dense (V, N) column-normalized matrix."""
+    """Build ELL docs from a dense (V, N) column-normalized matrix.
+
+    Fully vectorized (one np.nonzero + scatter): per-doc slots are the
+    column-sorted nnz positions, truncated at ``length`` like the original
+    per-column loop.
+    """
     c = np.asarray(c)
     v, n = c.shape
-    nnz_per_doc = (c > 0).sum(axis=0)
-    length = int(max_words if max_words is not None else max(1, nnz_per_doc.max()))
+    cols, rows = np.nonzero(c.T > 0)        # sorted by doc, then word id
+    counts = np.bincount(cols, minlength=n)
+    length = int(max_words if max_words is not None
+                 else max(1, counts.max(initial=0)))
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.arange(cols.size) - np.repeat(starts, counts)
+    keep = slot < length
     idx = np.zeros((n, length), dtype=np.int32)
     val = np.zeros((n, length), dtype=dtype)
-    for j in range(n):
-        rows = np.nonzero(c[:, j] > 0)[0][:length]
-        idx[j, : len(rows)] = rows
-        val[j, : len(rows)] = c[rows, j]
+    idx[cols[keep], slot[keep]] = rows[keep]
+    val[cols[keep], slot[keep]] = c[rows[keep], cols[keep]]
     return PaddedDocs(idx=jnp.asarray(idx), val=jnp.asarray(val))
 
 
@@ -85,15 +93,17 @@ def padded_docs_from_lists(word_ids: list[np.ndarray], counts: list[np.ndarray],
 
 
 def padded_docs_to_dense(docs: PaddedDocs, vocab_size: int) -> np.ndarray:
-    """Inverse of :func:`padded_docs_from_dense` (tests / dense baseline)."""
+    """Inverse of :func:`padded_docs_from_dense` (tests / dense baseline).
+
+    One np.add.at scatter over the live ELL slots (duplicated word ids
+    accumulate, matching the original O(N*L) loop).
+    """
     idx = np.asarray(docs.idx)
     val = np.asarray(docs.val)
     n, length = idx.shape
     c = np.zeros((vocab_size, n), dtype=val.dtype)
-    for j in range(n):
-        for l in range(length):
-            if val[j, l] > 0:
-                c[idx[j, l], j] += val[j, l]
+    jj, ll = np.nonzero(val > 0)
+    np.add.at(c, (idx[jj, ll], jj), val[jj, ll])
     return c
 
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(a_ref, b_ref, r_ref, m_ref, k_ref, kr_ref, *, lam: float):
+def _kernel(a_ref, b_ref, r_ref, *out_refs, lam: float, k_only: bool):
     a = a_ref[...]                       # (v_r, w)   resident
     b = b_ref[...]                       # (bv, w)    streamed tile
     r = r_ref[...]                       # (v_r, 1)
@@ -35,36 +35,49 @@ def _kernel(a_ref, b_ref, r_ref, m_ref, k_ref, kr_ref, *, lam: float):
     d2 = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
     m = jnp.sqrt(d2)
     k = jnp.exp(-lam * m)
+    if k_only:
+        (k_ref,) = out_refs
+        k_ref[...] = k
+        return
+    m_ref, k_ref, kr_ref = out_refs
     m_ref[...] = m
     k_ref[...] = k
     kr_ref[...] = k / r
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "block_v", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "block_v", "interpret", "k_only"))
 def cdist_exp(a: jax.Array, b: jax.Array, r: jax.Array, lam: float,
-              block_v: int = 512, interpret: bool = False):
+              block_v: int = 512, interpret: bool = False,
+              k_only: bool = False):
     """Fused (M, K, K_over_r) for query embeddings ``a`` (v_r, w), vocabulary
     embeddings ``b`` (V, w), query frequencies ``r`` (v_r,).
 
     V must divide by ``block_v``; pad ``w``/``v_r`` via
     :func:`repro.kernels.ops.pad_to` (zero-padding embedding width is exact —
     zeros add nothing to the distance).
+
+    ``k_only=True`` writes ONLY the K output (returned alone): consumers
+    that reconstruct GM from G (the fused solver path) would otherwise pay
+    HBM stores for two dead (v_r, V) buffers — Pallas outputs can't be
+    dead-code-eliminated by XLA.
     """
     v_r, w = a.shape
     v = b.shape[0]
     assert v % block_v == 0, (v, block_v)
     grid = (v // block_v,)
-    out_shape = [jax.ShapeDtypeStruct((v_r, v), a.dtype)] * 3
     out_spec = pl.BlockSpec((v_r, block_v), lambda i: (0, i))
-    return pl.pallas_call(
-        functools.partial(_kernel, lam=lam),
+    n_out = 1 if k_only else 3
+    out = pl.pallas_call(
+        functools.partial(_kernel, lam=lam, k_only=k_only),
         grid=grid,
         in_specs=[
             pl.BlockSpec((v_r, w), lambda i: (0, 0)),      # a resident
             pl.BlockSpec((block_v, w), lambda i: (i, 0)),  # b streamed
             pl.BlockSpec((v_r, 1), lambda i: (0, 0)),      # r resident
         ],
-        out_specs=[out_spec, out_spec, out_spec],
-        out_shape=out_shape,
+        out_specs=[out_spec] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((v_r, v), a.dtype)] * n_out,
         interpret=interpret,
     )(a, b, r.reshape(-1, 1))
+    return out[0] if k_only else out

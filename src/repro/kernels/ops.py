@@ -33,14 +33,19 @@ def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
 
 
 def cdist_exp(a, b, r, lam: float, block_v: int = 512,
-              interpret: bool | None = None):
-    """Fused (M, K, K_over_r) with auto-padding. a (v_r, w), b (V, w)."""
+              interpret: bool | None = None, k_only: bool = False):
+    """Fused (M, K, K_over_r) with auto-padding. a (v_r, w), b (V, w).
+    ``k_only=True`` returns just K and skips the two dead HBM stores."""
     interpret = INTERPRET if interpret is None else interpret
     v_r, w = a.shape
     v = b.shape[0]
     ap = pad_to(pad_to(a, 1, 128), 0, 8)
     bp = pad_to(pad_to(b, 1, 128), 0, block_v)
     rp = pad_to(r, 0, 8, value=1.0)          # pad rows divide by 1
+    if k_only:
+        k = _cdist_exp.cdist_exp(ap, bp, rp, lam, block_v=block_v,
+                                 interpret=interpret, k_only=True)
+        return k[:v_r, :v]
     m, k, kr = _cdist_exp.cdist_exp(ap, bp, rp, lam,
                                     block_v=block_v, interpret=interpret)
     return m[:v_r, :v], k[:v_r, :v], kr[:v_r, :v]
@@ -59,17 +64,31 @@ def sddmm_spmm_step(g, g_over_r, val, x, block_n: int = 128,
     return out[:v_r, :n]
 
 
-def sinkhorn_fused_all(g, gm, val, r, n_iter: int, block_n: int = 128,
+def sinkhorn_fused_all(g, val, r, lam: float, n_iter: int, block_n: int = 128,
                        interpret: bool | None = None):
     interpret = INTERPRET if interpret is None else interpret
     v_r, n, length = g.shape
     gp = pad_to(pad_to(pad_to(g, 2, 128), 1, block_n), 0, 8)
-    gmp = pad_to(pad_to(pad_to(gm, 2, 128), 1, block_n), 0, 8)
     valp = pad_to(pad_to(val, 1, 128), 0, block_n)
     rp = pad_to(r, 0, 8, value=1.0)
-    wmd = _sddmm_spmm.sinkhorn_fused_all(gp, gmp, valp, rp, n_iter,
+    wmd = _sddmm_spmm.sinkhorn_fused_all(gp, valp, rp, lam, n_iter,
                                          block_n=block_n, interpret=interpret)
     return wmd[:n]
+
+
+def sinkhorn_fused_all_batched(g, val, r, lam: float, n_iter: int,
+                               block_n: int = 128,
+                               interpret: bool | None = None):
+    """Batched fused solver with auto-padding. g (Q, v_r, N, L); val (N, L);
+    r (Q, v_r) -> wmd (Q, N). Padded query rows carry r == 1, G == 0."""
+    interpret = INTERPRET if interpret is None else interpret
+    q, v_r, n, length = g.shape
+    gp = pad_to(pad_to(pad_to(g, 3, 128), 2, block_n), 1, 8)
+    valp = pad_to(pad_to(val, 1, 128), 0, block_n)
+    rp = pad_to(r, 1, 8, value=1.0)
+    wmd = _sddmm_spmm.sinkhorn_fused_all_batched(
+        gp, valp, rp, lam, n_iter, block_n=block_n, interpret=interpret)
+    return wmd[:, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "n_iter", "interpret"))
@@ -78,10 +97,10 @@ def sinkhorn_wmd_kernel(r, vecs_sel, vecs, docs: PaddedDocs, lam: float,
     """Full kernel-path WMD: cdist_exp -> gather (XLA) -> fused solver.
 
     The gather between the two kernels stays in XLA (TPU gather over the
-    vocab axis); everything else runs in Pallas.
+    vocab axis); everything else runs in Pallas. GM is reconstructed from G
+    inside the solver, so only one (v_r, N, L) array is ever materialized.
     """
-    m, k, _ = cdist_exp(vecs_sel, vecs, r, lam, interpret=interpret)
+    k = cdist_exp(vecs_sel, vecs, r, lam, interpret=interpret, k_only=True)
     g = jnp.take(k, docs.idx, axis=1)          # (v_r, N, L)
-    gm = jnp.take(k * m, docs.idx, axis=1)
-    return sinkhorn_fused_all(g, gm, docs.val, r, n_iter,
+    return sinkhorn_fused_all(g, docs.val, r, lam, n_iter,
                               interpret=interpret)

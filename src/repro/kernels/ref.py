@@ -27,8 +27,9 @@ def sddmm_spmm_step_ref(g, g_over_r, val, x):
     return jnp.einsum("knl,nl->kn", g_over_r, w)
 
 
-def sinkhorn_fused_all_ref(g, gm, val, r, n_iter: int):
-    """Oracle for kernels.sinkhorn_fused_all (full solve + distance)."""
+def sinkhorn_fused_all_materialized_ref(g, gm, val, r, n_iter: int):
+    """Explicit-GM oracle (the pre-reconstruction formulation): used to prove
+    the in-VMEM GM reconstruction equals the materialized gather."""
     rowmask = jnp.sum(jnp.abs(g), axis=(1, 2)) > 0
     v_r_true = jnp.sum(rowmask.astype(g.dtype))
     x0 = jnp.where(rowmask, 1.0 / v_r_true, 0.0)
@@ -47,3 +48,16 @@ def sinkhorn_fused_all_ref(g, gm, val, r, n_iter: int):
     t = jnp.einsum("knl,kn->nl", g, u)
     w = val * _safe_inv(t) * live
     return jnp.einsum("kn,knl,nl->n", u, gm, w)
+
+
+def reconstruct_gm_ref(g, lam: float):
+    """Oracle for kernels.sddmm_spmm.reconstruct_gm: GM = -G*log(G)/lam."""
+    safe = jnp.where(g > 0, g, 1.0)
+    return jnp.where(g > 0, -g * jnp.log(safe) / lam, 0.0)
+
+
+def sinkhorn_fused_all_ref(g, val, r, lam: float, n_iter: int):
+    """Oracle for kernels.sinkhorn_fused_all (full solve + distance; GM
+    reconstructed from G exactly as the kernel does)."""
+    return sinkhorn_fused_all_materialized_ref(g, reconstruct_gm_ref(g, lam),
+                                               val, r, n_iter)

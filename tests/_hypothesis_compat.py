@@ -1,0 +1,73 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The property-based tests use a small subset of the hypothesis API
+(``given`` / ``settings`` / three strategies). When the real package is
+installed (``pip install -e .[test]``) it is used directly; otherwise this
+module provides a tiny deterministic fallback so the tier-1 suite still
+collects and exercises every property with seeded pseudo-random examples
+(no shrinking, no failure database — coverage over convenience).
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_at(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Record max_examples on the (already-wrapped) test function."""
+        def apply(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return apply
+
+    def given(**strategies):
+        """Run the test body over deterministic strategy draws.
+
+        The wrapper intentionally takes no parameters (and does not set
+        ``__wrapped__``) so pytest never mistakes strategy arguments for
+        fixtures.
+        """
+        def apply(fn):
+            def run_examples():
+                n = getattr(run_examples, "_shim_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = _np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {name: s.example_at(rng)
+                             for name, s in strategies.items()}
+                    fn(**drawn)
+            run_examples.__name__ = fn.__name__
+            run_examples.__doc__ = fn.__doc__
+            run_examples.__module__ = fn.__module__
+            return run_examples
+        return apply

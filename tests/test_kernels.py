@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels.ref import (cdist_exp_ref, sddmm_spmm_step_ref,
@@ -30,6 +30,16 @@ def test_cdist_exp_shapes(rng, v_r, v, w, block_v):
     np.testing.assert_allclose(m, mr, rtol=2e-3, atol=5e-3)
     np.testing.assert_allclose(k, kref, rtol=2e-3, atol=5e-3)
     np.testing.assert_allclose(kr, krr, rtol=2e-3, atol=5e-2)
+
+
+def test_cdist_exp_k_only_matches_full(rng):
+    """k_only mode (fused-solver path: no dead M/K_over_r stores) returns
+    the same K as the full three-output kernel."""
+    a, b = _rand(rng, 16, 128), _rand(rng, 256, 128)
+    r = jnp.asarray(rng.uniform(0.1, 1.0, 16).astype(np.float32))
+    _, k_full, _ = ops.cdist_exp(a, b, r, 4.0)
+    k_only = ops.cdist_exp(a, b, r, 4.0, k_only=True)
+    np.testing.assert_array_equal(np.asarray(k_only), np.asarray(k_full))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
@@ -59,35 +69,40 @@ def test_sddmm_spmm_step_shapes(rng, v_r, n, length, block_n):
 
 
 # --------------------------------------------------------- fused full solver
+def _rand_g(rng, v_r, n, length):
+    """G entries as the solver sees them: gathered K = exp(-lam*M) in (0, 1]."""
+    return jnp.asarray(rng.uniform(0.02, 1.0,
+                                   (v_r, n, length)).astype(np.float32))
+
+
 @pytest.mark.parametrize("v_r,n,length,n_iter,block_n", [
     (19, 128, 40, 15, 64), (8, 64, 16, 5, 32), (43, 256, 64, 25, 128),
 ])
 def test_sinkhorn_fused_all_shapes(rng, v_r, n, length, n_iter, block_n):
-    g = jnp.abs(_rand(rng, v_r, n, length)) + 0.05
-    gm = jnp.abs(_rand(rng, v_r, n, length))
+    g = _rand_g(rng, v_r, n, length)
     val = jnp.abs(_rand(rng, n, length))
     val = jnp.where(val > 0.5, val, 0.0)
     val = val.at[:, 0].set(1.0)                   # every doc has >=1 word
     r = jnp.asarray(rng.uniform(0.1, 1.0, v_r).astype(np.float32))
-    out = ops.sinkhorn_fused_all(g, gm, val, r, n_iter, block_n=block_n)
-    ref = sinkhorn_fused_all_ref(g, gm, val, r, n_iter)
+    lam = 7.0
+    out = ops.sinkhorn_fused_all(g, val, r, lam, n_iter, block_n=block_n)
+    ref = sinkhorn_fused_all_ref(g, val, r, lam, n_iter)
     np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)
 
 
 def test_fused_all_handles_padded_rows(rng):
     """Padded query rows (G row == 0, r == 1) must be exactly inert."""
     v_r, n, length = 10, 64, 16
-    g = jnp.abs(_rand(rng, v_r, n, length)) + 0.05
-    gm = jnp.abs(_rand(rng, v_r, n, length))
+    g = _rand_g(rng, v_r, n, length)
     val = jnp.where(jnp.abs(_rand(rng, n, length)) > 0.5, 1.0, 0.0)
     val = val.at[:, 0].set(1.0)
     r = jnp.asarray(rng.uniform(0.1, 1.0, v_r).astype(np.float32))
-    base = ops.sinkhorn_fused_all(g, gm, val, r, 10)
+    base = ops.sinkhorn_fused_all(g, val, r, 5.0, 10)
     # append 6 dead rows
     zpad = jnp.zeros((6, n, length))
-    g2 = jnp.concatenate([g, zpad]); gm2 = jnp.concatenate([gm, zpad])
+    g2 = jnp.concatenate([g, zpad])
     r2 = jnp.concatenate([r, jnp.ones(6)])
-    padded = ops.sinkhorn_fused_all(g2, gm2, val, r2, 10)
+    padded = ops.sinkhorn_fused_all(g2, val, r2, 5.0, 10)
     np.testing.assert_allclose(padded, base, rtol=1e-6, atol=1e-6)
 
 

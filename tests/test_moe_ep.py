@@ -22,7 +22,8 @@ SCRIPT = textwrap.dedent("""
     from repro.models.moe import init_moe, moe_apply, moe_apply_ep
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    jax.set_mesh(mesh)
+    # jax >= 0.5 global-mesh API; older jax relies on the `with mesh:` below
+    getattr(jax, "set_mesh", lambda m: None)(mesh)
     e, d, ff, k = 8, 32, 16, 2
     p = init_moe(jax.random.PRNGKey(0), d, ff, e, 1, k, tp=4)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, d)) * 0.5

@@ -7,7 +7,7 @@ random corpora."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import one_to_many, select_support
 from repro.core.sparse import PaddedDocs, padded_docs_from_lists
