@@ -11,11 +11,13 @@ v_r-bucket chunk, doc-length-grouped ELL). Compile is excluded from both
 via warmup, and the engine's distances are asserted against the loop's on
 every run before any timing is reported.
 
-``LAM = 1.0`` here (the per-query figures keep the seed's 9.0): at this
-synthetic corpus's distance scale (~10) a lam of 9 underflows K = exp(-lam*M)
-to all-zeros and the seed solver's unguarded 1/x turns every distance into
-NaN — the seed benchmark was timing NaN propagation. lam*M ~ 10 keeps the
-transport well-posed so the engine-vs-loop distances can be asserted equal.
+``LAM = 1.0`` everywhere (including the per-query rows, which kept the
+seed's 9.0 until ISSUE 2): at this synthetic corpus's distance scale (~10)
+a lam of 9 underflows K = exp(-lam*M) to all-zeros and the seed solver's
+unguarded 1/x turns every distance into NaN — the seed benchmark was timing
+NaN propagation, and ``one_to_many`` now *raises* ``LamUnderflowError`` for
+that configuration instead of returning NaN. lam*M ~ 10 keeps the transport
+well-posed so the engine-vs-loop distances can be asserted equal.
 """
 from __future__ import annotations
 
@@ -80,7 +82,7 @@ def main(out=print) -> None:
     for i, q in enumerate(corpus.queries[:6]):
         v_r = int((q > 0).sum())
         t = timeit(lambda q=q: one_to_many(q, corpus.docs, corpus.vecs,
-                                           lam=9.0, n_iter=15, impl="sparse"),
+                                           lam=LAM, n_iter=15, impl="sparse"),
                    warmup=1, iters=3)
         out(row(f"fig6.query{i}_vr{v_r}", t * 1e6, f"v_r={v_r}"))
 

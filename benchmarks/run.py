@@ -12,8 +12,8 @@ import json
 import sys
 import traceback
 
-from . import (fig5_scaling, fig6_multi_query, fig7_cdist, moe_router,
-               python_baseline, roofline, table1_profile)
+from . import (fig5_scaling, fig6_multi_query, fig7_cdist, fig8_topk_prune,
+               moe_router, python_baseline, roofline, table1_profile)
 
 MODULES = [
     ("table1_profile", table1_profile),
@@ -21,6 +21,7 @@ MODULES = [
     ("fig5_scaling", fig5_scaling),
     ("fig6_multi_query", fig6_multi_query),
     ("fig7_cdist", fig7_cdist),
+    ("fig8_topk_prune", fig8_topk_prune),
     ("moe_router", moe_router),
     ("roofline", roofline),
 ]

@@ -1,13 +1,16 @@
-"""End-to-end serving driver: batched WMD document retrieval.
+"""End-to-end serving driver: staged top-k WMD document retrieval.
 
     PYTHONPATH=src python examples/wmd_search.py [--n-docs 2048] [--queries 8]
 
 The paper's practical use case ("find whether a tweet is similar to any
-other tweets of a given day"): a stream of query documents scored against
-the WHOLE corpus through the batched multi-query engine — the corpus index
-is frozen once, queries are bucketed by support size and each bucket runs
-as ONE fused solve; returns top-k per query with latency stats. Pass
-``--looped`` to fall back to the seed per-query loop for comparison.
+other tweets of a given day"): a stream of query documents retrieved
+against the WHOLE corpus through the staged pipeline — the corpus index is
+frozen once, queries are bucketed by support size, and each batch runs
+*prune -> solve -> rank*: an admissible lower bound (``--prune``) excludes
+most documents, the fused Sinkhorn solve runs only on the surviving
+candidates, and the exact top-k comes back with latency stats and the
+solved-fraction per query. ``--prune none`` scores every document
+(exhaustive oracle); ``--looped`` falls back to the seed per-query loop.
 """
 import argparse
 import sys
@@ -21,6 +24,8 @@ import numpy as np
 from repro.core import WmdEngine, build_index, one_to_many
 from repro.data.corpus import make_corpus
 
+LAM = 4.0   # distance scale here is ~sqrt(2*64) ~ 11; keep lam*dist << 87
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -28,13 +33,16 @@ def main() -> None:
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--topk", type=int, default=5)
+    ap.add_argument("--prune", default="rwmd",
+                    choices=["none", "wcd", "rwmd", "wcd+rwmd"],
+                    help="prune-stage lower bound; 'none' = exhaustive")
     ap.add_argument("--impl", default="sparse",
                     help="engine: sparse|kernel; --looped accepts any "
                          "repro.core.IMPLS entry")
     ap.add_argument("--batches", type=int, default=4,
                     help="timed engine passes over the query set")
     ap.add_argument("--looped", action="store_true",
-                    help="seed per-query loop instead of the batched engine")
+                    help="seed per-query loop instead of the staged engine")
     args = ap.parse_args()
 
     corpus = make_corpus(vocab_size=args.vocab, embed_dim=64,
@@ -46,33 +54,38 @@ def main() -> None:
     if args.looped:
         for q in queries:                                 # compile pass
             jax.block_until_ready(one_to_many(q, corpus.docs, corpus.vecs,
-                                              lam=8.0, n_iter=15,
+                                              lam=LAM, n_iter=15,
                                               impl=args.impl))
         lat = []
         rows = []
         for q in queries:
             t0 = time.perf_counter()
             rows.append(np.asarray(one_to_many(q, corpus.docs, corpus.vecs,
-                                               lam=8.0, n_iter=15,
+                                               lam=LAM, n_iter=15,
                                                impl=args.impl)))
             lat.append(time.perf_counter() - t0)
         d = np.stack(rows)
         batch_ms = [sum(lat) * 1e3]
+        for qi, q in enumerate(queries):
+            top = np.argsort(d[qi])[:args.topk]
+            print(f"query {qi} (v_r={int((q > 0).sum())}): "
+                  f"top-{args.topk} = {top.tolist()} "
+                  f"d={np.round(d[qi][top], 3).tolist()}")
     else:
+        prune = None if args.prune == "none" else args.prune
         index = build_index(corpus.docs, corpus.vecs)     # frozen once
-        engine = WmdEngine(index, lam=8.0, n_iter=15, impl=args.impl)
-        d = np.asarray(engine.query_batch(queries))       # compile pass
+        engine = WmdEngine(index, lam=LAM, n_iter=15, impl=args.impl)
+        res = engine.search(queries, args.topk, prune=prune)  # compile pass
         batch_ms = []
         for _ in range(args.batches):
             t0 = time.perf_counter()
-            d = np.asarray(engine.query_batch(queries))
+            res = engine.search(queries, args.topk, prune=prune)
             batch_ms.append((time.perf_counter() - t0) * 1e3)
-
-    for qi, q in enumerate(queries):
-        top = np.argsort(d[qi])[:args.topk]
-        v_r = int((q > 0).sum())
-        print(f"query {qi} (v_r={v_r}): top-{args.topk} = {top.tolist()} "
-              f" d={np.round(d[qi][top], 3).tolist()}")
+        for qi, q in enumerate(queries):
+            print(f"query {qi} (v_r={int((q > 0).sum())}): "
+                  f"top-{args.topk} = {res.indices[qi].tolist()} "
+                  f"d={np.round(res.distances[qi], 3).tolist()} "
+                  f"solved={int(res.solved[qi])}/{args.n_docs}")
 
     batch_ms = np.asarray(batch_ms)
     per_query = batch_ms.mean() / args.queries

@@ -1,24 +1,29 @@
 """Core library: the paper's contribution as composable JAX modules."""
-from .index import (CorpusIndex, DocGroup, WmdEngine, bucket_size,
-                    build_index)
-from .sinkhorn import (cdist, precompute, select_support, sinkhorn_wmd_dense,
-                       sinkhorn_wmd_dense_stabilized)
+from .index import (CorpusIndex, DocGroup, SearchResult, WmdEngine,
+                    append_docs, bucket_size, build_index)
+from .prune import (PRUNERS, MaxPruner, Pruner, RwmdPruner, WcdPruner,
+                    resolve_pruner)
+from .sinkhorn import (LamUnderflowError, cdist, precompute, select_support,
+                       sinkhorn_wmd_dense, sinkhorn_wmd_dense_stabilized,
+                       underflow_report)
 from .sinkhorn_sparse import (precompute_sparse, reconstruct_gm,
                               sinkhorn_wmd_sparse,
                               sinkhorn_wmd_sparse_unfused)
 from .sparse import (BlockSparse, PaddedDocs, block_density,
                      block_sparse_from_dense, padded_docs_from_dense,
                      padded_docs_from_lists, padded_docs_to_dense)
-from .wmd import IMPLS, many_to_many, one_to_many
+from .wmd import IMPLS, many_to_many, one_to_many, search
 from .router import route, sinkhorn_route, topk_route
 
 __all__ = [
-    "CorpusIndex", "DocGroup", "WmdEngine", "bucket_size", "build_index",
+    "CorpusIndex", "DocGroup", "SearchResult", "WmdEngine", "append_docs",
+    "bucket_size", "build_index", "PRUNERS", "MaxPruner", "Pruner",
+    "RwmdPruner", "WcdPruner", "resolve_pruner", "LamUnderflowError",
     "cdist", "precompute", "select_support", "sinkhorn_wmd_dense",
-    "sinkhorn_wmd_dense_stabilized", "precompute_sparse", "reconstruct_gm",
-    "sinkhorn_wmd_sparse", "sinkhorn_wmd_sparse_unfused", "BlockSparse",
-    "PaddedDocs", "block_density", "block_sparse_from_dense",
+    "sinkhorn_wmd_dense_stabilized", "underflow_report", "precompute_sparse",
+    "reconstruct_gm", "sinkhorn_wmd_sparse", "sinkhorn_wmd_sparse_unfused",
+    "BlockSparse", "PaddedDocs", "block_density", "block_sparse_from_dense",
     "padded_docs_from_dense", "padded_docs_from_lists",
-    "padded_docs_to_dense", "IMPLS", "many_to_many", "one_to_many",
+    "padded_docs_to_dense", "IMPLS", "many_to_many", "one_to_many", "search",
     "route", "sinkhorn_route", "topk_route",
 ]

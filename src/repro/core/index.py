@@ -31,11 +31,25 @@ batches the query side:
     distinct ``v_r``. GM is reconstructed from G everywhere (never
     materialized), so the per-bucket footprint is two nnz-sized arrays.
 
+``WmdEngine.search`` (the staged retrieval pipeline, ISSUE 2)
+    The paper's motivating workload is top-k retrieval, and exhaustive
+    scoring does asymptotically too much work for it: ``search(queries, k)``
+    runs *prune -> solve -> rank*. A cheap admissible lower bound from
+    :mod:`repro.core.prune` (WCD / doc-side RWMD) scores every (query, doc)
+    pair first; the Sinkhorn solve then runs only on (a) the k best-bounded
+    seed docs and (b) the docs whose bound cannot be excluded by the kth
+    seed distance — gathered out of the frozen index into a trimmed ELL
+    subset slice. With an admissible bound the returned top-k equals the
+    exhaustive one exactly; ``prune=None`` reproduces exhaustive
+    ``query_batch`` + argsort bit-for-bit.
+
 Typical use::
 
     index = build_index(corpus.docs, corpus.vecs)
     engine = WmdEngine(index, lam=9.0, n_iter=15, impl="sparse")
-    dists = engine.query_batch(queries)        # (Q, N)
+    dists = engine.query_batch(queries)            # (Q, N) exhaustive
+    res = engine.search(queries, k=10)             # pruned top-k
+    index2 = append_docs(index, more_docs)         # streaming, no rebuild
 """
 from __future__ import annotations
 
@@ -47,6 +61,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .sinkhorn import LamUnderflowError, underflow_report
 from .sinkhorn_sparse import reconstruct_gm
 from .sparse import PaddedDocs
 
@@ -65,10 +80,13 @@ class DocGroup(NamedTuple):
 class CorpusIndex(NamedTuple):
     """Query-independent corpus state, frozen once and reused forever."""
 
-    docs: PaddedDocs    # full ELL corpus: idx (N, L) int32, val (N, L)
-    groups: tuple       # tuple[DocGroup, ...] — nnz-sorted, width-trimmed
-    vecs: jax.Array     # (V, w) vocabulary embeddings, device-resident
-    vecs_sq: jax.Array  # (V,) per-word |b|^2 — corpus half of the cdist GEMM
+    docs: PaddedDocs     # full ELL corpus: idx (N, L) int32, val (N, L)
+    groups: tuple        # tuple[DocGroup, ...] — nnz-sorted, width-trimmed
+    vecs: jax.Array      # (V, w) vocabulary embeddings, device-resident
+    vecs_sq: jax.Array   # (V,) per-word |b|^2 — corpus half of the cdist GEMM
+    centroids: jax.Array  # (N, w) per-doc mass centroids (WCD prune stage)
+    docs_host: PaddedDocs  # np mirror of ``docs`` — candidate staging reads
+    #                        row slices host-side without a full D2H copy
 
     @property
     def n_docs(self) -> int:
@@ -82,10 +100,63 @@ class CorpusIndex(NamedTuple):
     def embed_dim(self) -> int:
         return self.vecs.shape[1]
 
+    def subset(self, doc_ids) -> DocGroup:
+        """Candidate-subset slice for the solve stage: gather ``doc_ids``
+        out of the full ELL corpus into one width-trimmed :class:`DocGroup`
+        (slots are front-compacted at build, so trimming to the subset's
+        max nnz loses nothing). Gathers from the host mirror — candidate
+        sets are small post-prune and change per query chunk, so they are
+        staged like queries: O(|doc_ids| * L) work, one small H2D upload,
+        no device round-trip.
+
+        Shapes are BUCKETED like the query side (doc count padded to a
+        power of two with inert all-zero docs, ELL width to a multiple of
+        8): candidate counts are data-dependent per search step and would
+        otherwise compile a fresh solver executable per step under serving
+        traffic. ``cols`` keeps only the real ids — consumers slice the
+        solve output to ``cols.shape[0]`` columns."""
+        doc_ids = np.asarray(doc_ids, np.int32)
+        idx = self.docs_host.idx[doc_ids]
+        val = self.docs_host.val[doc_ids]
+        lg = max(1, int((val > 0).sum(axis=1).max(initial=0)))
+        lg = min(-(-lg // 8) * 8, idx.shape[1])
+        n_pad = 8
+        while n_pad < doc_ids.size:
+            n_pad *= 2
+        pad = ((0, n_pad - doc_ids.size), (0, 0))
+        return DocGroup(docs=PaddedDocs(
+            idx=jnp.asarray(np.pad(idx[:, :lg], pad)),
+            val=jnp.asarray(np.pad(val[:, :lg], pad))),
+            cols=jnp.asarray(doc_ids))
+
+
+def _compact_slots(docs: PaddedDocs, dtype):
+    """Host copies with live slots compacted to the front (front-filled is
+    the builders' contract, but cheap to enforce for arbitrary inputs)."""
+    idx_np = np.asarray(docs.idx, np.int32)
+    val_np = np.asarray(docs.val, dtype)
+    slot_order = np.argsort(~(val_np > 0), axis=1, kind="stable")
+    return (np.take_along_axis(idx_np, slot_order, 1),
+            np.take_along_axis(val_np, slot_order, 1))
+
+
+def _doc_centroids(idx_np, val_np, vecs_np, chunk: int = 2048):
+    """Per-doc mass centroids sum_l val[n,l] * vecs[idx[n,l]] — the frozen
+    corpus half of the WCD prune stage. Chunked so the (n, L, w) gather
+    intermediate stays small at corpus scale."""
+    n = idx_np.shape[0]
+    out = np.empty((n, vecs_np.shape[1]), vecs_np.dtype)
+    for lo in range(0, max(n, 1), chunk):
+        hi = min(lo + chunk, n)
+        out[lo:hi] = np.einsum("nl,nlw->nw", val_np[lo:hi],
+                               vecs_np[idx_np[lo:hi]])
+    return out
+
 
 def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
                 doc_groups: int = 4) -> CorpusIndex:
-    """Freeze the corpus side: device-resident docs + embeddings + norms.
+    """Freeze the corpus side: device-resident docs + embeddings + norms +
+    per-doc centroids (the WCD prune stage's corpus half).
 
     Documents are additionally sorted by nnz and split into ``doc_groups``
     equal-count groups, each trimmed to its own max word count — the
@@ -93,13 +164,8 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
     once here instead of on every query.
     """
     vecs = jnp.asarray(vecs, dtype)
-    idx_np = np.asarray(docs.idx, np.int32)
-    val_np = np.asarray(docs.val, dtype)
-    # compact live slots to the front (front-filled is the builders'
-    # contract, but cheap to enforce for arbitrary PaddedDocs inputs)
-    slot_order = np.argsort(~(val_np > 0), axis=1, kind="stable")
-    idx_np = np.take_along_axis(idx_np, slot_order, 1)
-    val_np = np.take_along_axis(val_np, slot_order, 1)
+    vecs_np = np.asarray(vecs)
+    idx_np, val_np = _compact_slots(docs, dtype)
     nnz = (val_np > 0).sum(1)
     order = np.argsort(nnz, kind="stable")
     n = max(1, len(order))
@@ -115,7 +181,81 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
     return CorpusIndex(docs=PaddedDocs(idx=jnp.asarray(idx_np),
                                        val=jnp.asarray(val_np)),
                        groups=tuple(groups), vecs=vecs,
-                       vecs_sq=jnp.sum(vecs * vecs, axis=1))
+                       vecs_sq=jnp.sum(vecs * vecs, axis=1),
+                       centroids=jnp.asarray(
+                           _doc_centroids(idx_np, val_np, vecs_np)),
+                       docs_host=PaddedDocs(idx=idx_np, val=val_np))
+
+
+def _pad_width(a, width: int):
+    """Right-pad axis 1 with zeros; np in -> np out, jax in -> jax out."""
+    if a.shape[1] >= width:
+        return a
+    pads = ((0, 0), (0, width - a.shape[1]))
+    return (jnp.pad(a, pads) if isinstance(a, jax.Array)
+            else np.pad(a, pads))
+
+
+def append_docs(index: CorpusIndex, new_docs: PaddedDocs,
+                dtype=jnp.float32) -> CorpusIndex:
+    """Streaming index update: add documents WITHOUT a full rebuild.
+
+    The new docs join the group with the fewest members (widened only if
+    they are longer than its current ELL trim); every other group's arrays
+    are reused as-is — no re-sort, no re-gather, no centroid recompute for
+    existing docs. New docs get ids ``[n_docs, n_docs + n_new)``.
+    ``search``/``query_batch`` after an append match a from-scratch
+    ``build_index`` exactly: per-doc solves are independent and grouping /
+    ELL padding are inert (proven by the engine tests).
+    """
+    n_new = new_docs.idx.shape[0]
+    if n_new == 0:
+        return index
+    new_idx, new_val = _compact_slots(new_docs, dtype)
+    if int(new_idx.max(initial=0)) >= index.vocab_size:
+        raise ValueError("new docs reference word ids outside the index "
+                         f"vocabulary ({index.vocab_size})")
+    nnz = (new_val > 0).sum(1)
+    lg_new = max(1, int(nnz.max(initial=0)))
+    new_idx, new_val = new_idx[:, :lg_new], new_val[:, :lg_new]
+    n_old = index.n_docs
+
+    # full ELL corpus: widen whichever side is narrower, then concat — the
+    # device side on-device and the host mirror on-host, so only the NEW
+    # docs ever cross the device boundary
+    width = max(index.docs.idx.shape[1], lg_new)
+    docs = PaddedDocs(
+        idx=jnp.concatenate([_pad_width(index.docs.idx, width),
+                             jnp.asarray(_pad_width(new_idx, width))]),
+        val=jnp.concatenate([_pad_width(index.docs.val, width),
+                             jnp.asarray(_pad_width(new_val, width))]))
+    docs_host = PaddedDocs(
+        idx=np.concatenate([_pad_width(index.docs_host.idx, width),
+                            _pad_width(new_idx, width)]),
+        val=np.concatenate([_pad_width(index.docs_host.val, width),
+                            _pad_width(new_val, width)]))
+
+    # grow only the smallest group; all others are reused untouched
+    gi = int(np.argmin([g.cols.shape[0] for g in index.groups]))
+    grp = index.groups[gi]
+    gw = max(grp.docs.idx.shape[1], lg_new)
+    grown = DocGroup(
+        docs=PaddedDocs(
+            idx=jnp.concatenate([_pad_width(grp.docs.idx, gw),
+                                 jnp.asarray(_pad_width(new_idx, gw))]),
+            val=jnp.concatenate([_pad_width(grp.docs.val, gw),
+                                 jnp.asarray(_pad_width(new_val, gw))])),
+        cols=jnp.concatenate([grp.cols,
+                              jnp.arange(n_old, n_old + n_new,
+                                         dtype=jnp.int32)]))
+    groups = tuple(grown if i == gi else g
+                   for i, g in enumerate(index.groups))
+
+    cent_new = _doc_centroids(new_idx, new_val, np.asarray(index.vecs))
+    return index._replace(
+        docs=docs, groups=groups, docs_host=docs_host,
+        centroids=jnp.concatenate([index.centroids,
+                                   jnp.asarray(cent_new)]))
 
 
 def bucket_size(v_r: int, min_bucket: int = 8) -> int:
@@ -220,6 +360,20 @@ def _prepare_query(q, bucket: int, dtype):
     return sup, r, mask
 
 
+class SearchResult(NamedTuple):
+    """Top-k retrieval result from :meth:`WmdEngine.search`.
+
+    Rows for empty queries (no support) hold ``indices == -1`` and NaN
+    distances. ``solved`` counts the documents that went through the exact
+    Sinkhorn solve for each query — ``n_docs`` when exhaustive, the
+    surviving-candidate count when pruned.
+    """
+
+    indices: np.ndarray    # (Q, k) int32 doc ids, ascending distance
+    distances: np.ndarray  # (Q, k)
+    solved: np.ndarray     # (Q,) int64 exact solves per query
+
+
 class WmdEngine:
     """Persistent multi-query WMD engine over a frozen :class:`CorpusIndex`.
 
@@ -234,13 +388,19 @@ class WmdEngine:
     pad_q:       round each chunk's Q up to a power of two with inert all-pad
                  queries, bounding the set of compiled shapes under serving
                  traffic (Q buckets x v_r buckets executables total)
+    prune_slack: relative safety margin on the prune threshold in
+                 :meth:`search` — admissible bounds and exact scores are
+                 both fp32, so a candidate is kept unless its bound exceeds
+                 the threshold by more than this fraction. Costs a few extra
+                 survivors; guards the exact-top-k contract against rounding.
     """
 
     def __init__(self, index: CorpusIndex, lam: float = 10.0,
                  n_iter: int = 15, impl: str = "sparse",
                  min_bucket: int = 8, max_batch: int = 4,
                  pad_q: bool = True, block_n: int = 128,
-                 interpret: bool | None = None, dtype=jnp.float32):
+                 interpret: bool | None = None, dtype=jnp.float32,
+                 prune_slack: float = 1e-3):
         if impl not in ENGINE_IMPLS:
             raise ValueError(f"impl must be one of {ENGINE_IMPLS}, "
                              f"got {impl!r}")
@@ -254,57 +414,43 @@ class WmdEngine:
         self.block_n = int(block_n)
         self.interpret = interpret
         self.dtype = np.dtype(jnp.dtype(dtype).name)
+        self.prune_slack = float(prune_slack)
 
     def query(self, r_full) -> jax.Array:
         """WMD from one full-vocab query histogram to every doc: (N,)."""
         return self.query_batch([r_full])[0]
 
-    def query_batch(self, queries: Sequence) -> jax.Array:
-        """WMD for Q queries (rows of full-vocab histograms) -> (Q, N).
+    # ------------------------------------------------------------ staging
+    def _plan(self, queries: list):
+        """Bucket + chunk the query set: [(input positions, width), ...].
 
         Queries are grouped into power-of-two v_r buckets and SORTED by v_r
-        inside each bucket; each ``max_batch``-sized chunk is then trimmed to
-        the smallest multiple-of-8 width (the TPU sublane) covering its
-        members. The pow2 buckets bound the executable count, the sort + trim
-        bounds padding waste to < 8 rows per query. Row order of the result
-        matches the input order. A query with no support (all-zero
-        histogram) yields a NaN row — WMD is undefined for an empty
-        marginal — without affecting the other rows.
+        inside each bucket; each ``max_batch``-sized chunk is then trimmed
+        to the smallest multiple-of-8 width (the TPU sublane) covering its
+        members. The pow2 buckets bound the executable count, the sort +
+        trim bounds padding waste to < 8 rows per query. Empty queries
+        (no support) are left out entirely.
         """
-        queries = [np.asarray(q) for q in queries]
-        if not queries:
-            return jnp.zeros((0, self.index.n_docs), self.dtype)
         vr = [int((q > 0).sum()) for q in queries]
         buckets: dict[int, list[int]] = {}
-        for qi, q in enumerate(queries):
+        for qi in range(len(queries)):
             if vr[qi] == 0:
                 continue        # empty marginal: NaN row, never solved
             buckets.setdefault(bucket_size(vr[qi], self.min_bucket),
                                []).append(qi)
-
-        # dispatch every chunk before collecting any result: device compute
-        # of chunk i overlaps host prep of chunk i+1
-        pending = []
+        chunks = []
         for b in sorted(buckets):
             members = sorted(buckets[b], key=lambda qi: vr[qi])
             for lo in range(0, len(members), self.max_batch):
                 chunk = members[lo:lo + self.max_batch]
                 width = max(8, min(b, -(-max(vr[qi] for qi in chunk) // 8) * 8))
-                parts = self._solve_chunk([queries[qi] for qi in chunk], width)
-                pending.append((chunk, parts))
-        out = np.zeros((len(queries), self.index.n_docs), self.dtype)
-        for qi in range(len(queries)):
-            if vr[qi] == 0:
-                out[qi] = np.nan
-        for chunk, parts in pending:
-            for grp, wmd_g in parts:
-                cols = np.asarray(grp.cols)
-                out[np.ix_(chunk, cols)] = np.asarray(wmd_g)[:len(chunk)]
-        return jnp.asarray(out)
+                chunks.append((chunk, width))
+        return vr, chunks
 
-    def _solve_chunk(self, chunk_queries: list, width: int):
-        """Solve one padded chunk against every doc group; returns
-        [(DocGroup, wmd (Qpad, N_g)), ...] (device arrays, not yet synced)."""
+    def _prep_chunk(self, chunk_queries: list, width: int):
+        """Stage one chunk: (sup, r, mask) device arrays, q-padded to a
+        power of two with inert fillers (no support -> G rows all 0, r == 1)
+        when ``pad_q``."""
         prepared = [_prepare_query(q, width, self.dtype)
                     for q in chunk_queries]
         n_live = len(prepared)
@@ -313,26 +459,162 @@ class WmdEngine:
             q_pad = 1
             while q_pad < n_live:
                 q_pad *= 2
-        # inert filler queries: no support (mask 0 -> G rows all 0), r == 1
         filler = (np.zeros(width, np.int32), np.ones(width, self.dtype),
                   np.zeros(width, self.dtype))
         prepared += [filler] * (q_pad - n_live)
-        sup = jnp.asarray(np.stack([p[0] for p in prepared]))
-        r = jnp.asarray(np.stack([p[1] for p in prepared]))
-        mask = jnp.asarray(np.stack([p[2] for p in prepared]))
+        return (jnp.asarray(np.stack([p[0] for p in prepared])),
+                jnp.asarray(np.stack([p[1] for p in prepared])),
+                jnp.asarray(np.stack([p[2] for p in prepared])))
+
+    def _solve_group(self, kq, r, mask, grp: DocGroup):
+        """Solve one prepared chunk against one doc group (device array,
+        not yet synced): gather the group's K columns, run the batched
+        solver. Works for index groups and pruned candidate subsets alike —
+        the solve stage of the pipeline."""
         layout = "qbnl" if self.impl == "kernel" else "qnlb"
-        kq = _compute_kq(sup, mask, self.index.vecs, self.index.vecs_sq,
-                         self.lam)
-        parts = []
-        for grp in self.index.groups:
-            g = _gather_g(kq, grp.docs.idx, layout=layout)
-            if self.impl == "kernel":
-                from repro.kernels.ops import sinkhorn_fused_all_batched
-                wmd_g = sinkhorn_fused_all_batched(
-                    g, grp.docs.val, r, self.lam, self.n_iter,
-                    block_n=self.block_n, interpret=self.interpret)
-            else:
-                wmd_g = _solve_gathered(g, grp.docs.val, r, mask, self.lam,
-                                        self.n_iter)
-            parts.append((grp, wmd_g))
-        return parts
+        g = _gather_g(kq, grp.docs.idx, layout=layout)
+        if self.impl == "kernel":
+            from repro.kernels.ops import sinkhorn_fused_all_batched
+            return sinkhorn_fused_all_batched(
+                g, grp.docs.val, r, self.lam, self.n_iter,
+                block_n=self.block_n, interpret=self.interpret)
+        return _solve_gathered(g, grp.docs.val, r, mask, self.lam,
+                               self.n_iter)
+
+    def _kq(self, sup, mask):
+        return _compute_kq(sup, mask, self.index.vecs, self.index.vecs_sq,
+                           self.lam)
+
+    def _raise_if_nan(self, wmd_np: np.ndarray, chunk_queries: list) -> None:
+        """Every chunk query has support, so NaN here means the lam-driven
+        K underflow — diagnose (host-side, error path only) and raise
+        instead of returning NaN distances."""
+        bad = np.isnan(wmd_np).any(axis=1)
+        if bad.any():
+            from .sinkhorn import select_support
+            q = chunk_queries[int(np.nonzero(bad)[0][0])]
+            _, vecs_sel, _ = select_support(q, self.index.vecs)
+            raise LamUnderflowError(underflow_report(
+                self.lam, vecs_sel, self.index.vecs, self.index.docs))
+
+    # ----------------------------------------------------------- scoring
+    def query_batch(self, queries: Sequence) -> jax.Array:
+        """Exhaustive WMD for Q queries (full-vocab histogram rows) ->
+        (Q, N). Row order matches the input; a query with no support yields
+        a NaN row (WMD is undefined for an empty marginal). Raises
+        :class:`LamUnderflowError` if lam underflows K for a corpus word
+        (the distances would be NaN).
+        """
+        queries = [np.asarray(q) for q in queries]
+        if not queries:
+            return jnp.zeros((0, self.index.n_docs), self.dtype)
+        vr, chunks = self._plan(queries)
+        # dispatch every chunk before collecting any result: device compute
+        # of chunk i overlaps host prep of chunk i+1
+        pending = []
+        for chunk, width in chunks:
+            sup, r, mask = self._prep_chunk([queries[qi] for qi in chunk],
+                                            width)
+            kq = self._kq(sup, mask)
+            parts = [(grp, self._solve_group(kq, r, mask, grp))
+                     for grp in self.index.groups]
+            pending.append((chunk, parts))
+        out = np.zeros((len(queries), self.index.n_docs), self.dtype)
+        for qi in range(len(queries)):
+            if vr[qi] == 0:
+                out[qi] = np.nan
+        for chunk, parts in pending:
+            for grp, wmd_g in parts:
+                w = np.asarray(wmd_g)[:len(chunk)]
+                self._raise_if_nan(w, [queries[qi] for qi in chunk])
+                out[np.ix_(chunk, np.asarray(grp.cols))] = w
+        return jnp.asarray(out)
+
+    # ------------------------------------------------------------ search
+    def search(self, queries: Sequence, k: int,
+               prune: object = "rwmd") -> SearchResult:
+        """Staged top-k retrieval: prune -> solve -> rank.
+
+        ``prune=None`` scores exhaustively (:meth:`query_batch` + argsort,
+        bit-for-bit). Otherwise ``prune`` names a lower bound from
+        :mod:`repro.core.prune` (``"wcd"``, ``"rwmd"``, ``"wcd+rwmd"``) or
+        is a :class:`~repro.core.prune.Pruner` instance, and per chunk:
+
+        1. *prune*: admissible lower bounds lb (Qc, N), one batched pass;
+        2. *solve* (seed): exact Sinkhorn on the union of each query's k
+           best-bounded docs, gathered into a trimmed ELL subset slice;
+           the per-query kth-smallest exact distance becomes the pruning
+           threshold t_q — any doc with lb > t_q cannot enter the top-k;
+        3. *solve* (survivors): exact Sinkhorn on the docs whose bound
+           passes t_q (+ ``prune_slack`` fp margin);
+        4. *rank*: merge and argsort the exact distances.
+
+        With an admissible bound the result equals the exhaustive top-k
+        (indices and distances, up to tie order) while Sinkhorn runs on a
+        strict subset of documents — ``result.solved`` reports how strict.
+        The guarantee holds for ``"rwmd"`` (and its compositions), which
+        bounds the *computed* truncated-Sinkhorn score; ``"wcd"`` alone
+        bounds exact EMD and is exact only up to the iteration's
+        query-marginal residual vs ``prune_slack`` — near-exact at
+        practical ``n_iter``, see :mod:`repro.core.prune`.
+        """
+        queries = [np.asarray(q) for q in queries]
+        n = self.index.n_docs
+        if k <= 0:
+            raise ValueError(f"k must be positive, got {k}")
+        k = min(int(k), n)
+        nq = len(queries)
+        out_i = np.full((nq, k), -1, np.int32)
+        out_d = np.full((nq, k), np.nan, self.dtype)
+        solved = np.zeros(nq, np.int64)
+        if nq == 0:
+            return SearchResult(out_i, out_d, solved)
+
+        if prune is None:
+            d = np.asarray(self.query_batch(queries))
+            for qi in range(nq):
+                if np.isnan(d[qi]).all():
+                    continue                      # empty marginal
+                order = np.argsort(d[qi], kind="stable")[:k]
+                out_i[qi], out_d[qi] = order, d[qi, order]
+                solved[qi] = n
+            return SearchResult(out_i, out_d, solved)
+
+        from .prune import resolve_pruner
+        pruner = resolve_pruner(prune, use_kernel=(self.impl == "kernel"),
+                                interpret=self.interpret)
+        _, chunks = self._plan(queries)
+        for chunk, width in chunks:
+            cq = [queries[qi] for qi in chunk]
+            sup, r, mask = self._prep_chunk(cq, width)
+            lb = np.asarray(pruner.lower_bounds(self.index, sup, r,
+                                                mask))[:len(chunk)]
+            kq = self._kq(sup, mask)              # shared by both solves
+
+            def solve(doc_ids):                   # -> (len(chunk), |ids|)
+                w = np.asarray(self._solve_group(
+                    kq, r, mask, self.index.subset(doc_ids)))
+                w = w[:len(chunk), :doc_ids.size]  # drop q/doc shape padding
+                self._raise_if_nan(w, cq)
+                return w
+
+            # seed: each query's k best-bounded docs (chunk union — extra
+            # exact distances only tighten the other queries' thresholds)
+            seed = np.unique(np.argpartition(lb, k - 1, axis=1)[:, :k])
+            d_seed = solve(seed)
+            # threshold: kth-smallest exact distance known per query; any
+            # doc with lb > t cannot displace the k already-solved ones
+            t = np.partition(d_seed, k - 1, axis=1)[:, k - 1]
+            margin = self.prune_slack * (np.abs(t) + 1.0)
+            keep = lb <= (t + margin)[:, None]
+            keep[:, seed] = False
+            surv = np.nonzero(keep.any(axis=0))[0]
+            # rank over the compact candidate set only — never (Q, N)
+            cand = np.concatenate([seed, surv])
+            d_cand = (np.concatenate([d_seed, solve(surv)], axis=1)
+                      if surv.size else d_seed)
+            for ci, qi in enumerate(chunk):
+                order = np.argsort(d_cand[ci], kind="stable")[:k]
+                out_i[qi], out_d[qi] = cand[order], d_cand[ci, order]
+                solved[qi] = cand.size
+        return SearchResult(out_i, out_d, solved)

@@ -1,0 +1,179 @@
+"""Pluggable admissible lower bounds for the staged retrieval pipeline.
+
+``WmdEngine.search`` runs *prune -> solve -> rank*: a cheap lower bound on
+every (query, doc) pair first, the O(v_r * V * n_iter) Sinkhorn solve only
+on candidates the bound cannot exclude (Atasu et al., LC-RWMD,
+arXiv:1711.07227; Werner & Laber, arXiv:1912.00509; Kusner et al.'s
+prefetch-and-prune). Each bound implements the small :class:`Pruner`
+protocol, so stages are pluggable and composable (:class:`MaxPruner` takes
+the elementwise max of several admissible bounds, which is itself
+admissible).
+
+Admissibility — what "lower bound" means *here*. The engine's score is not
+exact EMD but ``<P, M>`` for the plan the truncated Sinkhorn iteration
+produces. That plan satisfies the **document-side marginal exactly** (the
+distance line recomputes ``w = val / (G^T u)``, so column sums equal
+``val`` by construction) while the query-side marginal holds only
+approximately. Hence:
+
+``RwmdPruner`` (doc-side relaxed WMD)
+    ``lb[q, n] = sum_l val[n, l] * min_k M[k, idx[n, l]]`` — every unit of
+    doc mass pays at least its distance to the *nearest* query word. Since
+    the engine's plan transports exactly ``val[n, l]`` out of each doc word,
+    ``lb <= <P, M>`` holds for the *computed* score (up to fp rounding —
+    covered by the engine's ``prune_slack``). This is the default pruner
+    and the one the exact-top-k guarantee rests on.
+
+``WcdPruner`` (word-centroid distance)
+    ``lb[q, n] = ||sum_k r_k vec_k - centroid_n||`` — one GEMM per query
+    chunk against centroids frozen in the :class:`~.index.CorpusIndex`.
+    Admissible w.r.t. exact EMD (Jensen), but w.r.t. the truncated-Sinkhorn
+    score only up to the query-marginal residual of the unconverged
+    iteration — at very small ``n_iter`` that residual can exceed the
+    engine's ``prune_slack`` and exclude a true top-k doc. WCD alone is
+    therefore *near*-exact, not guaranteed; the exact-top-k contract rests
+    on RWMD. Use WCD composed (``"wcd+rwmd"``, still guaranteed: MaxPruner
+    keeps every doc RWMD keeps... see below) or standalone when approximate
+    top-k at converged ``n_iter`` is acceptable.
+
+    (Note on composition: ``max(wcd, rwmd) <= score`` requires *both*
+    bounds admissible, so at tiny ``n_iter`` the same caveat applies to the
+    composite; at practical iteration counts the residual is far below the
+    slack — see ``test_bounds_below_engine_scores``.)
+
+Bounds are in raw distance units (no lam): they bound the transport-cost
+part ``<P, M>``, which is exactly what the solve stage returns.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class Pruner(Protocol):
+    """One prune stage: admissible lower bounds for a prepared query chunk.
+
+    ``sup``/``r``/``mask`` are the engine's bucketed chunk layout
+    ((Qp, B) support word ids, normalized frequencies with pad rows == 1,
+    and the live-row mask) — the same arrays the solve stage consumes, so
+    a pruner slots in front of any solve without re-staging queries.
+    Returns (Qp, N) bounds; rows past the live queries are don't-care.
+    """
+
+    name: str
+
+    def lower_bounds(self, index, sup: jax.Array, r: jax.Array,
+                     mask: jax.Array) -> jax.Array: ...
+
+
+@jax.jit
+def _wcd_bounds(qcent: jax.Array, centroids: jax.Array) -> jax.Array:
+    a2 = jnp.sum(qcent * qcent, axis=1)[:, None]
+    b2 = jnp.sum(centroids * centroids, axis=1)[None, :]
+    d2 = a2 + b2 - 2.0 * (qcent @ centroids.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@jax.jit
+def _query_centroids(sup, r, mask, vecs):
+    a = jnp.take(vecs, sup, axis=0)                  # (Qp, B, w)
+    return jnp.einsum("qb,qbw->qw", r * mask, a)     # pad rows (r==1) masked
+
+
+class WcdPruner:
+    """Word-centroid distance: one (Qp, w) x (w, N) GEMM per chunk."""
+
+    name = "wcd"
+
+    def lower_bounds(self, index, sup, r, mask):
+        return _wcd_bounds(_query_centroids(sup, r, mask, index.vecs),
+                           index.centroids)
+
+
+# XLA fallback for kernels.rwmd: the kernels' oracle IS the implementation
+# (single source of truth; ref.py imports only jax, so no core<->ops cycle)
+from repro.kernels.ref import rwmd_min_cdist_ref
+
+_min_cdist_xla = jax.jit(rwmd_min_cdist_ref)
+
+
+@jax.jit
+def _rwmd_gather(minm: jax.Array, idx: jax.Array, val: jax.Array):
+    """Own jit on purpose: XLA CPU would otherwise fuse the cdist producer
+    into the gather and recompute it per element (see ROADMAP note)."""
+    g = jnp.take(minm, idx, axis=1)                  # (Qp, N, L)
+    return jnp.einsum("qnl,nl->qn", g, val)
+
+
+class RwmdPruner:
+    """Doc-side relaxed WMD — tight, provably <= the engine's score.
+
+    ``use_kernel=True`` computes the masked min-cdist with the query-grid
+    Pallas kernel (:mod:`repro.kernels.rwmd`) so the prune stage is as
+    TPU-resident as the solve stage; the O(nnz) gather stays in XLA either
+    way (same boundary as the solve's G gather).
+    """
+
+    name = "rwmd"
+
+    def __init__(self, use_kernel: bool = False,
+                 interpret: bool | None = None):
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+
+    def lower_bounds(self, index, sup, r, mask):
+        a = jnp.take(index.vecs, sup, axis=0)        # (Qp, B, w)
+        if self.use_kernel:
+            from repro.kernels import ops
+            minm = ops.rwmd_min_cdist(a, mask, index.vecs,
+                                      interpret=self.interpret)
+        else:
+            minm = _min_cdist_xla(a, mask, index.vecs)
+        # all-pad filler rows have minm == +inf; inf * 0-mass stays out of
+        # live rows, and callers slice fillers off anyway
+        return _rwmd_gather(jnp.where(jnp.isfinite(minm), minm, 0.0),
+                            index.docs.idx, index.docs.val)
+
+
+class MaxPruner:
+    """Elementwise max of several admissible bounds (still admissible)."""
+
+    def __init__(self, pruners: Sequence[Pruner]):
+        self.pruners = tuple(pruners)
+        self.name = "+".join(p.name for p in self.pruners)
+
+    def lower_bounds(self, index, sup, r, mask):
+        bounds = [p.lower_bounds(index, sup, r, mask) for p in self.pruners]
+        return functools.reduce(jnp.maximum, bounds)
+
+
+PRUNERS = ("wcd", "rwmd", "wcd+rwmd")
+
+
+def resolve_pruner(spec, use_kernel: bool = False,
+                   interpret: bool | None = None) -> Pruner:
+    """Turn a spec (``"wcd"``, ``"rwmd"``, ``"wcd+rwmd"``, or any object
+    implementing :class:`Pruner`) into a pruner instance."""
+    if isinstance(spec, str):
+        parts = [p.strip() for p in spec.replace(",", "+").split("+") if p]
+        made = []
+        for p in parts:
+            if p == "wcd":
+                made.append(WcdPruner())
+            elif p == "rwmd":
+                made.append(RwmdPruner(use_kernel=use_kernel,
+                                       interpret=interpret))
+            else:
+                raise ValueError(
+                    f"unknown pruner {p!r}; pick from {PRUNERS} or pass a "
+                    f"Pruner instance")
+        if not made:
+            raise ValueError(f"empty pruner spec {spec!r}")
+        return made[0] if len(made) == 1 else MaxPruner(made)
+    if isinstance(spec, Pruner):
+        return spec
+    raise TypeError(f"prune must be a str, None, or Pruner, got {spec!r}")

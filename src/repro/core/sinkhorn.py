@@ -27,6 +27,54 @@ import jax.numpy as jnp
 from jax import lax
 
 
+# ln(fp32 min normal) ~ -87.3: exp(-x) flushes to exactly 0 beyond this,
+# and an all-zero gathered K column turns the Sinkhorn 1/(K^T u) line into
+# inf/NaN for every document containing that word.
+MAX_NEG_EXP = 87.0
+
+
+class LamUnderflowError(FloatingPointError):
+    """``K = exp(-lam*M)`` underflowed to all-zero for some corpus word.
+
+    Raised by the engine / ``one_to_many`` instead of silently returning
+    (and benchmarking!) NaN distances — the failure mode the seed fig6
+    config was timing at lam=9 on a distance-scale-10 corpus.
+    """
+
+
+def underflow_report(lam: float, vecs_sel, vecs, docs) -> str:
+    """Host-side diagnosis for :class:`LamUnderflowError` (error path only).
+
+    Finds the corpus words whose K column is all-zero — i.e. words farther
+    than ``MAX_NEG_EXP / lam`` from *every* query word — and counts the
+    documents containing one, so the message names the actual culprit
+    instead of a bare NaN.
+    """
+    import numpy as np
+
+    a = np.asarray(vecs_sel, np.float64)
+    b = np.asarray(vecs, np.float64)
+    d2 = (np.sum(a * a, 1)[:, None] + np.sum(b * b, 1)[None, :]
+          - 2.0 * (a @ b.T))
+    mincol = np.sqrt(np.maximum(d2, 0.0)).min(axis=0)     # (V,) to nearest
+    dead = lam * mincol > MAX_NEG_EXP                     # query word
+    idx = np.asarray(docs.idx)
+    live = np.asarray(docs.val) > 0
+    hit = dead[idx] & live
+    n_docs = int(hit.any(axis=1).sum())
+    scale = float(np.median(mincol[np.isfinite(mincol)]))
+    return (
+        f"K = exp(-lam*M) underflowed to an all-zero column for "
+        f"{int(dead[np.unique(idx[hit])].size)} corpus word(s) in {n_docs} "
+        f"document(s) at lam={lam:g} (fp32 cutoff: lam*dist > ~{MAX_NEG_EXP:.0f}; "
+        f"max lam*min-dist here = {lam * float(mincol.max()):.0f}). The "
+        f"Sinkhorn division by these columns would make every affected "
+        f"distance NaN. Reduce lam (corpus min-distance scale ~{scale:.1f} "
+        f"-> lam <~ {MAX_NEG_EXP / max(scale, 1e-9):.1f}) or use "
+        f"impl='dense_stabilized' (log-domain, large-lam safe)."
+    )
+
+
 def cdist(a: jax.Array, b: jax.Array) -> jax.Array:
     """Pairwise Euclidean distance, GEMM-shaped (paper §6).
 

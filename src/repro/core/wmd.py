@@ -2,6 +2,7 @@
 
     wmd = one_to_many(query_counts, corpus_docs, vecs, lam=..., n_iter=...,
                       impl="sparse")
+    res = search(queries, corpus_docs, vecs, k=10, prune="rwmd")
 
 Implementations (all produce identical distances, tested against each other
 and against the exact-LP oracle):
@@ -14,14 +15,19 @@ and against the exact-LP oracle):
                     Fig. 3 before fusion; for the fusion ablation)
   kernel            Pallas SDDMM_SpMM kernel path (TPU target; interpret-mode
                     on CPU)
+
+Top-k retrieval goes through the staged pipeline (prune -> solve -> rank,
+:meth:`repro.core.index.WmdEngine.search`); :func:`search` is the one-shot
+convenience wrapper (index built per call — hold a ``WmdEngine`` to amortize
+the corpus freeze across query batches).
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from .sinkhorn import (select_support, sinkhorn_wmd_dense,
-                       sinkhorn_wmd_dense_stabilized)
+from .sinkhorn import (LamUnderflowError, select_support, sinkhorn_wmd_dense,
+                       sinkhorn_wmd_dense_stabilized, underflow_report)
 from .sinkhorn_sparse import sinkhorn_wmd_sparse, sinkhorn_wmd_sparse_unfused
 from .sparse import PaddedDocs, padded_docs_to_dense
 
@@ -30,26 +36,39 @@ IMPLS = ("dense", "dense_stabilized", "sparse", "sparse_unfused", "kernel")
 
 def one_to_many(r_full, docs: PaddedDocs, vecs, lam: float = 10.0,
                 n_iter: int = 15, impl: str = "sparse",
-                dtype=jnp.float32):
+                dtype=jnp.float32, check_underflow: bool = True):
     """WMD from one query (full-vocab count/frequency vector ``r_full``) to
-    every document in ``docs``. Returns (N,) distances."""
+    every document in ``docs``. Returns (N,) distances.
+
+    ``check_underflow`` (all impls except the log-domain one): raise
+    :class:`LamUnderflowError` with a diagnosis when ``K = exp(-lam*M)``
+    underflowed and the distances came out NaN, instead of returning them.
+    The check syncs the result — pass ``False`` to keep dispatch async.
+    """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     vecs = jnp.asarray(vecs, dtype)
     r, vecs_sel, _ = select_support(r_full, vecs, dtype)
 
     if impl == "sparse":
-        return sinkhorn_wmd_sparse(r, vecs_sel, vecs, docs, lam, n_iter)
-    if impl == "sparse_unfused":
-        return sinkhorn_wmd_sparse_unfused(r, vecs_sel, vecs, docs, lam, n_iter)
-    if impl == "kernel":
+        out = sinkhorn_wmd_sparse(r, vecs_sel, vecs, docs, lam, n_iter)
+    elif impl == "sparse_unfused":
+        out = sinkhorn_wmd_sparse_unfused(r, vecs_sel, vecs, docs, lam,
+                                          n_iter)
+    elif impl == "kernel":
         from repro.kernels.ops import sinkhorn_wmd_kernel
-        return sinkhorn_wmd_kernel(r, vecs_sel, vecs, docs, lam, n_iter)
-
-    c = jnp.asarray(padded_docs_to_dense(docs, vecs.shape[0]), dtype)
-    if impl == "dense":
-        return sinkhorn_wmd_dense(r, vecs_sel, vecs, c, lam, n_iter)
-    return sinkhorn_wmd_dense_stabilized(r, vecs_sel, vecs, c, lam, n_iter)
+        out = sinkhorn_wmd_kernel(r, vecs_sel, vecs, docs, lam, n_iter)
+    else:
+        c = jnp.asarray(padded_docs_to_dense(docs, vecs.shape[0]), dtype)
+        if impl == "dense":
+            out = sinkhorn_wmd_dense(r, vecs_sel, vecs, c, lam, n_iter)
+        else:
+            return sinkhorn_wmd_dense_stabilized(r, vecs_sel, vecs, c, lam,
+                                                 n_iter)
+    if (check_underflow and r.shape[0] > 0
+            and bool(jnp.isnan(out).any())):
+        raise LamUnderflowError(underflow_report(lam, vecs_sel, vecs, docs))
+    return out
 
 
 def many_to_many(queries: list[np.ndarray], docs: PaddedDocs, vecs,
@@ -69,3 +88,15 @@ def many_to_many(queries: list[np.ndarray], docs: PaddedDocs, vecs,
         out = engine.query_batch(queries)
         return [out[i] for i in range(out.shape[0])]
     return [one_to_many(q, docs, vecs, lam, n_iter, impl) for q in queries]
+
+
+def search(queries, docs: PaddedDocs, vecs, k: int = 10, lam: float = 10.0,
+           n_iter: int = 15, impl: str = "sparse", prune: object = "rwmd"):
+    """One-shot top-k retrieval through the staged pipeline: freeze an index,
+    prune with an admissible lower bound, Sinkhorn-solve the survivors, rank.
+    Returns a :class:`repro.core.index.SearchResult`. ``prune=None`` scores
+    every document (exhaustive oracle path)."""
+    from .index import WmdEngine, build_index
+    engine = WmdEngine(build_index(docs, vecs), lam=lam, n_iter=n_iter,
+                       impl=impl)
+    return engine.search(queries, k, prune=prune)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.sparse import PaddedDocs
 from . import cdist_exp as _cdist_exp
+from . import rwmd as _rwmd
 from . import sddmm_spmm as _sddmm_spmm
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -49,6 +50,21 @@ def cdist_exp(a, b, r, lam: float, block_v: int = 512,
     m, k, kr = _cdist_exp.cdist_exp(ap, bp, rp, lam,
                                     block_v=block_v, interpret=interpret)
     return m[:v_r, :v], k[:v_r, :v], kr[:v_r, :v]
+
+
+def rwmd_min_cdist(a, mask, b, block_v: int = 512,
+                   interpret: bool | None = None):
+    """Masked min-over-support cdist with auto-padding (the RWMD prune
+    stage). a (Q, B, w), mask (Q, B), b (V, w) -> minM (Q, V)."""
+    interpret = INTERPRET if interpret is None else interpret
+    q, bq, w = a.shape
+    v = b.shape[0]
+    ap = pad_to(pad_to(a, 2, 128), 1, 8)
+    maskp = pad_to(mask, 1, 8)               # pad support rows masked out
+    bp = pad_to(pad_to(b, 1, 128), 0, block_v)
+    minm = _rwmd.rwmd_min_cdist(ap, maskp, bp, block_v=block_v,
+                                interpret=interpret)
+    return minm[:, :v]
 
 
 def sddmm_spmm_step(g, g_over_r, val, x, block_n: int = 128,

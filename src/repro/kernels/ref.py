@@ -15,6 +15,16 @@ def cdist_exp_ref(a, b, r, lam: float):
     return m, k, k / r[:, None]
 
 
+def rwmd_min_cdist_ref(a, mask, b):
+    """Oracle for kernels.rwmd.rwmd_min_cdist: masked min-over-support
+    distances. a (Q, B, w), mask (Q, B), b (V, w) -> (Q, V)."""
+    a2 = jnp.sum(a * a, axis=-1)[:, :, None]
+    b2 = jnp.sum(b * b, axis=-1)[None, None, :]
+    ab = jnp.einsum("qbw,vw->qbv", a, b)
+    d = jnp.sqrt(jnp.maximum(a2 + b2 - 2.0 * ab, 0.0))
+    return jnp.min(jnp.where(mask[:, :, None] > 0, d, jnp.inf), axis=1)
+
+
 def _safe_inv(x):
     return jnp.where(x > 0, 1.0 / jnp.where(x > 0, x, 1.0), 0.0)
 

@@ -8,9 +8,13 @@ LM decode server (assigned archs):
 
 WMD query server (the paper's own workload — query documents against the
 whole corpus through the persistent batched engine; ``--batch-queries Q``
-scores Q stream requests per fused solve):
+scores Q stream requests per fused solve; ``--top-k K`` switches to the
+staged retrieval pipeline — prune with ``--prune`` bounds, Sinkhorn-solve
+only the surviving candidates, rank):
     PYTHONPATH=src python -m repro.launch.serve --wmd --n-docs 2048 \
         --impl kernel --batch-queries 8
+    PYTHONPATH=src python -m repro.launch.serve --wmd --n-docs 2048 \
+        --top-k 10 --prune rwmd
 """
 from __future__ import annotations
 
@@ -62,25 +66,40 @@ def serve_wmd(args) -> None:
                        n_iter=args.n_iter, impl=args.impl)
     reqs = wmd_request_stream(corpus)
     bq = max(1, args.batch_queries)
+    prune = None if args.prune == "none" else args.prune
     times = []
+    solved = []
     for i in range(args.steps):
         batch = [next(reqs) for _ in range(bq)]
         t0 = time.time()
-        d = engine.query_batch(batch)
-        jax.block_until_ready(d)
+        if args.top_k > 0:
+            res = engine.search(batch, args.top_k, prune=prune)
+            jax.block_until_ready(res.distances)
+            solved.append(float(res.solved.mean()))
+            if i == 0:
+                print(f"query 0 -> top-3 docs {res.indices[0][:3].tolist()}")
+        else:
+            d = engine.query_batch(batch)
+            jax.block_until_ready(d)
+            if i == 0:
+                top = np.argsort(np.asarray(d[0]))[:3]
+                print(f"query 0 -> top-3 docs {top.tolist()}")
         times.append(time.time() - t0)
-        if i == 0:
-            top = np.argsort(np.asarray(d[0]))[:3]
-            print(f"query 0 -> top-3 docs {top.tolist()}")
     times = np.asarray(times[1:]) * 1e3
     p50 = float(np.percentile(times, 50))   # median: late batches may still
-    print(json.dumps({                      # compile fresh bucket shapes
-        "workload": "wmd_batched", "impl": args.impl,
+    rec = {                                 # compile fresh bucket shapes
+        "workload": "wmd_topk" if args.top_k > 0 else "wmd_batched",
+        "impl": args.impl,
         "n_docs": args.n_docs, "vocab": args.vocab, "batch_queries": bq,
         "ms_per_batch_p50": round(p50, 2),
         "queries_per_s": round(bq / (p50 / 1e3), 1),
         "docs_per_s": round(bq * args.n_docs / (p50 / 1e3), 0),
-    }))
+    }
+    if args.top_k > 0:
+        rec["top_k"] = args.top_k
+        rec["prune"] = args.prune
+        rec["solved_frac"] = round(float(np.mean(solved)) / args.n_docs, 4)
+    print(json.dumps(rec))
 
 
 def main() -> None:
@@ -92,10 +111,18 @@ def main() -> None:
     ap.add_argument("--wmd", action="store_true")
     ap.add_argument("--impl", default="sparse")
     ap.add_argument("--batch-queries", type=int, default=8)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="> 0: staged top-k retrieval (prune->solve->rank) "
+                         "instead of exhaustive scoring")
+    ap.add_argument("--prune", default="rwmd",
+                    choices=["none", "wcd", "rwmd", "wcd+rwmd"],
+                    help="lower bound for the prune stage (with --top-k)")
     ap.add_argument("--n-docs", type=int, default=1024)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--embed-dim", type=int, default=64)
-    ap.add_argument("--lam", type=float, default=10.0)
+    # this synthetic corpus' distance scale is ~sqrt(2*embed_dim) ~ 11;
+    # lam must keep lam*dist < ~87 or K underflows (the engine now raises)
+    ap.add_argument("--lam", type=float, default=1.0)
     ap.add_argument("--n-iter", type=int, default=15)
     args = ap.parse_args()
     if args.wmd:
