@@ -1,0 +1,84 @@
+"""Benchmark-trajectory gate: compare a current bench record to a baseline.
+
+The ``bench-trajectory`` CI job commits ``benchmarks/run.py --json`` records
+from ``main`` (``benchmarks/trajectory/BENCH_<shortsha>.json`` plus a
+``latest.json`` pointer); the PR ``bench-smoke`` job reads the latest main
+record and fails on a wall-time regression:
+
+    python -m benchmarks.compare --baseline baseline.json \\
+        --current BENCH_smoke.json --max-ratio 1.3 --prefixes fig7 fig8
+
+Only benchmarks whose name starts with one of ``--prefixes`` gate (the
+rest are reported for context). A missing/empty baseline passes with a
+note — the first record on main seeds the trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: str) -> dict:
+    p = Path(path)
+    if not p.is_file():
+        return {}
+    try:
+        return {str(k): float(v) for k, v in json.loads(p.read_text()).items()}
+    except (ValueError, AttributeError):
+        print(f"warning: could not parse {path}; treating as empty baseline")
+        return {}
+
+
+def compare(baseline: dict, current: dict, max_ratio: float, prefixes) -> list[str]:
+    """Return the list of gating regressions (empty = pass)."""
+    failures = []
+    for name in sorted(current):
+        if name not in baseline or baseline[name] <= 0:
+            continue
+        ratio = current[name] / baseline[name]
+        gating = any(name.startswith(p) for p in prefixes)
+        marker = "GATE" if gating else "info"
+        print(
+            f"[{marker}] {name}: {baseline[name]:.1f} -> {current[name]:.1f} us "
+            f"({ratio:.2f}x)"
+        )
+        if gating and ratio > max_ratio:
+            failures.append(f"{name}: {ratio:.2f}x > {max_ratio:.2f}x")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--max-ratio", type=float, default=1.3)
+    ap.add_argument(
+        "--prefixes",
+        nargs="+",
+        default=["fig7", "fig8"],
+        help="bench-name prefixes that gate (others are informational)",
+    )
+    args = ap.parse_args(argv)
+
+    current = load(args.current)
+    if not current:
+        print(f"error: no current records in {args.current}")
+        return 2
+    baseline = load(args.baseline)
+    if not baseline:
+        print(f"no baseline records in {args.baseline}; seeding run — pass")
+        return 0
+    failures = compare(baseline, current, args.max_ratio, args.prefixes)
+    if failures:
+        print("bench-trajectory gate FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("bench-trajectory gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,9 +32,10 @@ WORKER = textwrap.dedent("""
     r, vs, _ = select_support(q, c.vecs)
     docs = shard_balanced(c.docs, n)
     mesh = jax.make_mesh((1, n), ("data", "model"))
-    run = lambda: sinkhorn_wmd_sparse_distributed(
-        r, vs, jnp.asarray(c.vecs), docs, 9.0, 15, mesh,
-        vshard_precompute=True)
+    def run():
+        return sinkhorn_wmd_sparse_distributed(
+            r, vs, jnp.asarray(c.vecs), docs, 9.0, 15, mesh,
+            vshard_precompute=True)
     jax.block_until_ready(run())
     ts = []
     for _ in range(3):
@@ -54,7 +55,7 @@ def main(out=print) -> None:
         res = subprocess.run([sys.executable, "-c", WORKER, str(n)],
                              capture_output=True, text=True, env=env,
                              timeout=600)
-        line = [l for l in res.stdout.splitlines() if l.startswith("{")]
+        line = [ln for ln in res.stdout.splitlines() if ln.startswith("{")]
         if not line:
             out(row(f"fig5.shards_{n}", -1, "FAILED"))
             continue

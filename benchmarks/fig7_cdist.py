@@ -29,7 +29,8 @@ def main(out=print) -> None:
         k = jnp.exp(-lam * m)
         return m, k, k / r[:, None]
     f_pipe = jax.jit(pipeline_gemm)
-    f_fused = lambda: ops.cdist_exp(a, b, r, lam)
+    def f_fused():
+        return ops.cdist_exp(a, b, r, lam)
 
     t_b = timeit(f_bcast)
     t_g = timeit(f_gemm)

@@ -8,7 +8,6 @@ path (corpus statistics scaled to CPU: V/L work ratio preserved in spirit).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ import jax.numpy as jnp
 
 
 def main(out=print) -> None:
-    import numpy as np
     from repro.core.distributed import sinkhorn_wmd_sparse_distributed
     from repro.core.sparse import PaddedDocs
     from repro.launch.mesh import make_production_mesh

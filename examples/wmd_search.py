@@ -34,8 +34,13 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--topk", type=int, default=5)
     ap.add_argument("--prune", default="rwmd",
-                    choices=["none", "wcd", "rwmd", "wcd+rwmd"],
-                    help="prune-stage lower bound; 'none' = exhaustive")
+                    choices=["none", "wcd", "rwmd", "wcd+rwmd", "ivf+wcd",
+                             "ivf+rwmd", "ivf+wcd+rwmd"],
+                    help="prune-stage lower bound or IVF cascade; "
+                         "'none' = exhaustive")
+    ap.add_argument("--nprobe", type=int, default=0,
+                    help="ivf cascades: clusters probed per query "
+                         "(0 = all = exact top-k)")
     ap.add_argument("--impl", default="sparse",
                     help="engine: sparse|kernel; --looped accepts any "
                          "repro.core.IMPLS entry")
@@ -73,13 +78,16 @@ def main() -> None:
                   f"d={np.round(d[qi][top], 3).tolist()}")
     else:
         prune = None if args.prune == "none" else args.prune
+        nprobe = args.nprobe if args.nprobe > 0 else None
         index = build_index(corpus.docs, corpus.vecs)     # frozen once
         engine = WmdEngine(index, lam=LAM, n_iter=15, impl=args.impl)
-        res = engine.search(queries, args.topk, prune=prune)  # compile pass
+        res = engine.search(queries, args.topk, prune=prune,
+                            nprobe=nprobe)                # compile pass
         batch_ms = []
         for _ in range(args.batches):
             t0 = time.perf_counter()
-            res = engine.search(queries, args.topk, prune=prune)
+            res = engine.search(queries, args.topk, prune=prune,
+                                nprobe=nprobe)
             batch_ms.append((time.perf_counter() - t0) * 1e3)
         for qi, q in enumerate(queries):
             print(f"query {qi} (v_r={int((q > 0).sum())}): "

@@ -106,7 +106,7 @@ def restore(ckpt_dir: str, step: int, template: dict,
             sflat = jax.tree_util.tree_leaves(
                 shardings[group],
                 is_leaf=lambda x: hasattr(x, "addressable_devices"))
-            leaves = [jax.device_put(l, s) for l, s in zip(leaves, sflat)]
+            leaves = [jax.device_put(x, s) for x, s in zip(leaves, sflat)]
         out[group] = jax.tree_util.tree_unflatten(treedef, leaves)
     return out
 

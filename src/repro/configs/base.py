@@ -16,7 +16,7 @@ parallel degree at 16, so head counts are adapted at build time:
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
@@ -85,7 +85,7 @@ class ArchConfig:
 
     def n_params(self) -> int:
         """Approximate true (unpadded) parameter count."""
-        d, l, v = self.d_model, self.num_layers, self.vocab_size
+        d, nl, v = self.d_model, self.num_layers, self.vocab_size
         emb = v * d * (1 if self.tie_embeddings else 2)
         per = 0
         if self.ssm and self.ssm.kind == "mamba2":
@@ -101,7 +101,7 @@ class ArchConfig:
                 + self.num_heads * hd * d
             if self.attn_every:             # hybrid: ONE shared block
                 per_shared = attn + 3 * d * self.d_ff
-                return emb + l * per + per_shared
+                return emb + nl * per + per_shared
             per += attn
         if self.moe:
             per += d * self.moe.n_experts
@@ -110,16 +110,16 @@ class ArchConfig:
         elif self.d_ff and not self.ssm:
             mult = 3 if self.mlp == "swiglu" else 2
             per += mult * d * self.d_ff
-        return emb + l * per
+        return emb + nl * per
 
     def n_active_params(self) -> int:
         """Active params per token (MoE: only routed top_k + shared)."""
         if not self.moe:
             return self.n_params()
-        d, l = self.d_model, self.num_layers
+        d, nl = self.d_model, self.num_layers
         total = self.n_params()
-        all_experts = 3 * d * self.moe.d_ff * self.moe.n_experts * l
-        active = 3 * d * self.moe.d_ff * self.moe.top_k * l
+        all_experts = 3 * d * self.moe.d_ff * self.moe.n_experts * nl
+        active = 3 * d * self.moe.d_ff * self.moe.top_k * nl
         return total - all_experts + active
 
     def reduced(self) -> "ArchConfig":

@@ -1,8 +1,9 @@
 """Core library: the paper's contribution as composable JAX modules."""
-from .index import (CorpusIndex, DocGroup, SearchResult, WmdEngine,
-                    append_docs, bucket_size, build_index)
-from .prune import (PRUNERS, MaxPruner, Pruner, RwmdPruner, WcdPruner,
-                    resolve_pruner)
+from .index import (CorpusIndex, DocGroup, IvfClusters, SearchResult,
+                    WmdEngine, append_docs, bucket_size, build_index,
+                    default_n_clusters)
+from .prune import (PRUNERS, CascadePruner, MaxPruner, Pruner, RwmdPruner,
+                    WcdPruner, resolve_pruner)
 from .sinkhorn import (LamUnderflowError, cdist, precompute, select_support,
                        sinkhorn_wmd_dense, sinkhorn_wmd_dense_stabilized,
                        underflow_report)
@@ -16,9 +17,10 @@ from .wmd import IMPLS, many_to_many, one_to_many, search
 from .router import route, sinkhorn_route, topk_route
 
 __all__ = [
-    "CorpusIndex", "DocGroup", "SearchResult", "WmdEngine", "append_docs",
-    "bucket_size", "build_index", "PRUNERS", "MaxPruner", "Pruner",
-    "RwmdPruner", "WcdPruner", "resolve_pruner", "LamUnderflowError",
+    "CorpusIndex", "DocGroup", "IvfClusters", "SearchResult", "WmdEngine",
+    "append_docs", "bucket_size", "build_index", "default_n_clusters",
+    "PRUNERS", "CascadePruner", "MaxPruner", "Pruner", "RwmdPruner",
+    "WcdPruner", "resolve_pruner", "LamUnderflowError",
     "cdist", "precompute", "select_support", "sinkhorn_wmd_dense",
     "sinkhorn_wmd_dense_stabilized", "underflow_report", "precompute_sparse",
     "reconstruct_gm", "sinkhorn_wmd_sparse", "sinkhorn_wmd_sparse_unfused",

@@ -32,7 +32,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .sinkhorn import cdist
+from .sinkhorn import LamUnderflowError, cdist, underflow_report
 from .sinkhorn_sparse import reconstruct_gm
 from .sparse import PaddedDocs
 
@@ -100,9 +100,22 @@ def sinkhorn_wmd_dense_distributed(r, vecs_sel, vecs, c, lam: float,
 # sparse distributed (production path)
 # --------------------------------------------------------------------------
 
+def _check_underflow(out, lam, vecs_sel, vecs, docs):
+    """Host-side lam-hygiene guard shared by the distributed solvers: a K
+    underflow poisons every affected shard's distances with NaN — raise the
+    same diagnosed :class:`LamUnderflowError` the engine raises instead of
+    returning (and all-reducing) NaN."""
+    import numpy as np
+
+    if vecs_sel.shape[0] > 0 and np.isnan(np.asarray(out)).any():
+        raise LamUnderflowError(underflow_report(lam, vecs_sel, vecs, docs))
+    return out
+
+
 def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
                                     lam: float, n_iter: int, mesh: Mesh,
-                                    vshard_precompute: bool = True):
+                                    vshard_precompute: bool = True,
+                                    check_underflow: bool = True):
     """ELL fused Sinkhorn with docs sharded over every mesh axis.
 
     ``vshard_precompute=False``: baseline — every chip computes the full
@@ -117,6 +130,11 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     reconstructed from G after the collective — each ELL entry is owned by
     exactly one vocab shard, so the scattered G is exact — which halves the
     assembly traffic versus shipping G and GM.)
+
+    Both variants guard lam hygiene like the engine: NaN distances from a
+    ``K = exp(-lam*M)`` underflow raise :class:`LamUnderflowError` with a
+    diagnosis (``check_underflow=False`` opts out — the check syncs the
+    sharded result).
     """
     doc_axes = _doc_axes(mesh)
     docs_spec = P(doc_axes)
@@ -133,7 +151,10 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
             g = jnp.take(k, idx_loc, axis=1)
             return _ell_loop(r, g, val_loc, lam, n_iter, doc_axes)
 
-        return run(r, vecs_sel, vecs, docs.idx, docs.val)
+        out = run(r, vecs_sel, vecs, docs.idx, docs.val)
+        if check_underflow:
+            _check_underflow(out, lam, vecs_sel, vecs, docs)
+        return out
 
     # optimized: vocab-sharded precompute, psum_scatter-assembled gather.
     # Docs enter sharded over the data axes and REPLICATED over model; each
@@ -169,7 +190,10 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
         return _ell_loop(r, g, val_my, lam, n_iter,
                          data_axes + ("model",))
 
-    return run(r, vecs_sel, vecs, docs.idx, docs.val)
+    out = run(r, vecs_sel, vecs, docs.idx, docs.val)
+    if check_underflow:
+        _check_underflow(out, lam, vecs_sel, vecs, docs)
+    return out
 
 
 def _ell_loop(r, g, val, lam, n_iter, vary_axes=()):
@@ -201,11 +225,12 @@ def sharded_inputs(mesh: Mesh, r, vecs_sel, vecs, docs: PaddedDocs,
     """Device_put inputs with the shardings the distributed solvers expect."""
     doc_axes = _doc_axes(mesh)
     if for_impl == "sparse":
-        specs = dict(vecs=P() if True else P("model"),
-                     idx=P(doc_axes), val=P(doc_axes))
+        specs = dict(vecs=P(), idx=P(doc_axes), val=P(doc_axes))
     else:
         specs = dict(vecs=P("model"), idx=None, val=None)
-    put = lambda x, s: jax.device_put(x, NamedSharding(mesh, s))
+
+    def put(x, s):
+        return jax.device_put(x, NamedSharding(mesh, s))
     out = dict(r=put(r, P()), vecs_sel=put(vecs_sel, P()),
                vecs=put(vecs, specs["vecs"]))
     if for_impl == "sparse":

@@ -77,6 +77,151 @@ class DocGroup(NamedTuple):
     cols: jax.Array     # (N_g,) original doc positions (for reassembly)
 
 
+class IvfClusters(NamedTuple):
+    """Frozen IVF coarse quantizer over the per-doc WCD centroids.
+
+    k-means runs ONCE at :func:`build_index` (mini-batch Lloyd, device-side);
+    :func:`append_docs` assigns new docs to the nearest existing center
+    without touching the clustering — centers are reused by identity, only
+    the host-side membership arrays (and the grown clusters' radii) change.
+    The cluster structure powers the :class:`~repro.core.prune.CascadePruner`
+    cascade twice: the (Q, n_clusters) probe GEMM replaces the (Q, N) sweep
+    for candidate generation, and ``radii`` gives a *cluster-level* lower
+    bound ``||qcent - center_c|| - radius_c <= wcd(q, n)`` for every member
+    n (triangle inequality; Werner & Laber-style), so whole clusters are
+    excluded against the pruning threshold without touching their docs.
+    """
+
+    centers: jax.Array   # (C, w) cluster centers, device-resident
+    assign: np.ndarray   # (N,) host: cluster id per doc
+    order: np.ndarray    # (N,) host: doc ids sorted by cluster id
+    starts: np.ndarray   # (C + 1,) host: cluster c owns order[starts[c]:
+    #                      starts[c + 1]] — contiguous shortlist slices
+    radii: np.ndarray    # (C,) host: max ||center_c - centroid_n|| over
+    #                      members (cluster-level bound; grows on append)
+    assign_dev: jax.Array  # (N,) device mirror of ``assign`` (the dense
+    #                        prune pass looks up doc -> probed cluster)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.diff(self.starts)
+
+
+@jax.jit
+def _assign_clusters(points: jax.Array, centers: jax.Array) -> jax.Array:
+    """Nearest-center assignment for one mini-batch: (B, w) -> (B,)."""
+    d2 = (jnp.sum(points * points, axis=1)[:, None]
+          + jnp.sum(centers * centers, axis=1)[None, :]
+          - 2.0 * (points @ centers.T))
+    return jnp.argmin(d2, axis=1)
+
+
+@jax.jit
+def _kmeans_accum(points: jax.Array, centers: jax.Array):
+    """One mini-batch's contribution to the Lloyd update: per-center
+    coordinate sums + member counts (one-hot GEMM, stays on device)."""
+    onehot = jax.nn.one_hot(_assign_clusters(points, centers),
+                            centers.shape[0], dtype=points.dtype)
+    return onehot.T @ points, jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def _farthest_point_init(points: jax.Array, c: int, start) -> jax.Array:
+    """Maxmin (farthest-point) seeding: each new center is the point
+    farthest from all chosen so far. Deterministic, device-side, O(C*N*w)
+    once at build — spreads centers across the corpus' actual modes (a
+    random draw lands several centers in one dense mode and none in small
+    ones, which inflates cluster radii and blunts the triangle bound)."""
+    mind = jnp.sum((points - points[start]) ** 2, axis=1)
+    centers = jnp.zeros((c, points.shape[1]), points.dtype)
+    centers = centers.at[0].set(points[start])
+
+    def body(i, carry):
+        centers, mind = carry
+        cen = points[jnp.argmax(mind)]
+        centers = centers.at[i].set(cen)
+        return centers, jnp.minimum(mind, jnp.sum((points - cen) ** 2,
+                                                  axis=1))
+
+    centers, _ = lax.fori_loop(1, c, body, (centers, mind))
+    return centers
+
+
+def _kmeans(centroids: jax.Array, n_clusters: int, n_iters: int = 10,
+            batch: int = 4096, seed: int = 0, init_sample: int = 65536):
+    """Mini-batch Lloyd k-means over the doc centroids, device-side.
+
+    Farthest-point init (on an ``init_sample``-capped subset at corpus
+    scale), then each Lloyd iteration streams the (N, w) centroid matrix
+    through :func:`_kmeans_accum` in ``batch``-sized slices (the (B, C)
+    one-hot and the assignment cdist never exceed a mini-batch) and applies
+    one exact update; empty clusters keep their previous center.
+    Deterministic in ``seed``. Returns (centers (C, w), assign host (N,)).
+    """
+    n = centroids.shape[0]
+    rng = np.random.default_rng(seed)
+    pool = centroids
+    if n > init_sample:
+        keep = np.sort(rng.choice(n, size=init_sample, replace=False))
+        pool = jnp.take(centroids, jnp.asarray(keep, jnp.int32), axis=0)
+    centers = _farthest_point_init(pool, n_clusters,
+                                   int(rng.integers(pool.shape[0])))
+    for _ in range(n_iters):
+        sums = jnp.zeros_like(centers)
+        counts = jnp.zeros((n_clusters,), centers.dtype)
+        for lo in range(0, n, batch):
+            s, c = _kmeans_accum(centroids[lo:lo + batch], centers)
+            sums, counts = sums + s, counts + c
+        centers = jnp.where(counts[:, None] > 0,
+                            sums / jnp.maximum(counts, 1.0)[:, None],
+                            centers)
+    assign = np.concatenate([
+        np.asarray(_assign_clusters(centroids[lo:lo + batch], centers))
+        for lo in range(0, n, batch)]).astype(np.int32)
+    return centers, assign
+
+
+def _membership(assign: np.ndarray, n_clusters: int):
+    """(order, starts) from an assignment: cluster c's docs are the
+    contiguous slice order[starts[c]:starts[c + 1]]."""
+    order = np.argsort(assign, kind="stable").astype(np.int32)
+    starts = np.searchsorted(assign[order],
+                             np.arange(n_clusters + 1)).astype(np.int64)
+    return order, starts
+
+
+def _member_dists(centroids, centers, assign: np.ndarray,
+                  chunk: int = 4096) -> np.ndarray:
+    """(N,) host distances from each doc centroid to its assigned center."""
+    n = assign.shape[0]
+    out = np.empty(n, np.float64)
+    assign_dev = jnp.asarray(assign.astype(np.int32))
+    for lo in range(0, n, chunk):
+        own = jnp.take(centers, assign_dev[lo:lo + chunk], axis=0)
+        d = jnp.linalg.norm(centroids[lo:lo + chunk] - own, axis=1)
+        out[lo:lo + chunk] = np.asarray(d, np.float64)
+    return out
+
+
+def _cluster_radii(centroids, centers, assign: np.ndarray,
+                   n_clusters: int) -> np.ndarray:
+    """(C,) max member distance per cluster (0 for empty clusters)."""
+    radii = np.zeros(n_clusters, np.float64)
+    if assign.size:
+        np.maximum.at(radii, assign, _member_dists(centroids, centers,
+                                                   assign))
+    return radii
+
+
+def default_n_clusters(n_docs: int) -> int:
+    """sqrt(N) coarse-quantizer heuristic (classic IVF sizing)."""
+    return max(1, min(n_docs, int(round(float(np.sqrt(max(n_docs, 1)))))))
+
+
 class CorpusIndex(NamedTuple):
     """Query-independent corpus state, frozen once and reused forever."""
 
@@ -87,6 +232,8 @@ class CorpusIndex(NamedTuple):
     centroids: jax.Array  # (N, w) per-doc mass centroids (WCD prune stage)
     docs_host: PaddedDocs  # np mirror of ``docs`` — candidate staging reads
     #                        row slices host-side without a full D2H copy
+    clusters: IvfClusters = None  # IVF coarse quantizer over the centroids
+    #                               (the CascadePruner's shortlist stage)
 
     @property
     def n_docs(self) -> int:
@@ -154,14 +301,18 @@ def _doc_centroids(idx_np, val_np, vecs_np, chunk: int = 2048):
 
 
 def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
-                doc_groups: int = 4) -> CorpusIndex:
+                doc_groups: int = 4, n_clusters: int | None = None,
+                ivf_iters: int = 10, ivf_seed: int = 0) -> CorpusIndex:
     """Freeze the corpus side: device-resident docs + embeddings + norms +
-    per-doc centroids (the WCD prune stage's corpus half).
+    per-doc centroids (the WCD prune stage's corpus half) + the IVF coarse
+    quantizer over those centroids (the cascade's shortlist stage).
 
     Documents are additionally sorted by nnz and split into ``doc_groups``
     equal-count groups, each trimmed to its own max word count — the
     per-query solve work drops by the corpus' ELL padding fraction, paid
-    once here instead of on every query.
+    once here instead of on every query. ``n_clusters`` defaults to the
+    sqrt(N) IVF heuristic; clustering runs mini-batch Lloyd on device and
+    is frozen afterwards (:func:`append_docs` only assigns).
     """
     vecs = jnp.asarray(vecs, dtype)
     vecs_np = np.asarray(vecs)
@@ -178,13 +329,29 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
             docs=PaddedDocs(idx=jnp.asarray(idx_np[sel][:, :lg]),
                             val=jnp.asarray(val_np[sel][:, :lg])),
             cols=jnp.asarray(sel.astype(np.int32))))
+    centroids = jnp.asarray(_doc_centroids(idx_np, val_np, vecs_np))
+    n_docs = idx_np.shape[0]
+    if n_clusters is None:
+        n_clusters = default_n_clusters(n_docs)
+    n_clusters = max(1, min(int(n_clusters), max(n_docs, 1)))
+    if n_docs:
+        centers, assign = _kmeans(centroids, n_clusters, n_iters=ivf_iters,
+                                  seed=ivf_seed)
+    else:
+        centers = jnp.zeros((n_clusters, vecs.shape[1]), dtype)
+        assign = np.zeros((0,), np.int32)
+    c_order, c_starts = _membership(assign, n_clusters)
+    radii = _cluster_radii(centroids, centers, assign, n_clusters)
     return CorpusIndex(docs=PaddedDocs(idx=jnp.asarray(idx_np),
                                        val=jnp.asarray(val_np)),
                        groups=tuple(groups), vecs=vecs,
                        vecs_sq=jnp.sum(vecs * vecs, axis=1),
-                       centroids=jnp.asarray(
-                           _doc_centroids(idx_np, val_np, vecs_np)),
-                       docs_host=PaddedDocs(idx=idx_np, val=val_np))
+                       centroids=centroids,
+                       docs_host=PaddedDocs(idx=idx_np, val=val_np),
+                       clusters=IvfClusters(centers=centers, assign=assign,
+                                            order=c_order, starts=c_starts,
+                                            radii=radii,
+                                            assign_dev=jnp.asarray(assign)))
 
 
 def _pad_width(a, width: int):
@@ -207,6 +374,13 @@ def append_docs(index: CorpusIndex, new_docs: PaddedDocs,
     ``search``/``query_batch`` after an append match a from-scratch
     ``build_index`` exactly: per-doc solves are independent and grouping /
     ELL padding are inert (proven by the engine tests).
+
+    IVF clusters are FROZEN: the new docs are assigned to their nearest
+    existing center (no re-clustering — ``centers`` is reused by identity)
+    and only the host-side membership arrays are rebuilt. Exact search
+    (``nprobe = n_clusters``) is unaffected; smaller-``nprobe`` recall
+    degrades only as far as the frozen centers drift from the grown
+    corpus — rebuild when that matters.
     """
     n_new = new_docs.idx.shape[0]
     if n_new == 0:
@@ -252,10 +426,27 @@ def append_docs(index: CorpusIndex, new_docs: PaddedDocs,
                    for i, g in enumerate(index.groups))
 
     cent_new = _doc_centroids(new_idx, new_val, np.asarray(index.vecs))
+    clusters = index.clusters
+    if clusters is not None:
+        cent_new_dev = jnp.asarray(cent_new)
+        assign_new = np.asarray(
+            _assign_clusters(cent_new_dev,
+                             clusters.centers)).astype(np.int32)
+        assign = np.concatenate([clusters.assign, assign_new])
+        c_order, c_starts = _membership(assign, clusters.n_clusters)
+        # frozen centers: only the grown clusters' radii can expand
+        radii = clusters.radii.copy()
+        np.maximum.at(radii, assign_new,
+                      _member_dists(cent_new_dev, clusters.centers,
+                                    assign_new))
+        clusters = clusters._replace(assign=assign, order=c_order,
+                                     starts=c_starts, radii=radii,
+                                     assign_dev=jnp.asarray(assign))
     return index._replace(
         docs=docs, groups=groups, docs_host=docs_host,
         centroids=jnp.concatenate([index.centroids,
-                                   jnp.asarray(cent_new)]))
+                                   jnp.asarray(cent_new)]),
+        clusters=clusters)
 
 
 def bucket_size(v_r: int, min_bucket: int = 8) -> int:
@@ -531,20 +722,29 @@ class WmdEngine:
         return jnp.asarray(out)
 
     # ------------------------------------------------------------ search
-    def search(self, queries: Sequence, k: int,
-               prune: object = "rwmd") -> SearchResult:
+    def search(self, queries: Sequence, k: int, prune: object = "rwmd",
+               nprobe: int | None = None) -> SearchResult:
         """Staged top-k retrieval: prune -> solve -> rank.
 
         ``prune=None`` scores exhaustively (:meth:`query_batch` + argsort,
         bit-for-bit). Otherwise ``prune`` names a lower bound from
-        :mod:`repro.core.prune` (``"wcd"``, ``"rwmd"``, ``"wcd+rwmd"``) or
-        is a :class:`~repro.core.prune.Pruner` instance, and per chunk:
+        :mod:`repro.core.prune` (``"wcd"``, ``"rwmd"``, ``"wcd+rwmd"``, a
+        cascaded ``"ivf+wcd+rwmd"``) or is a
+        :class:`~repro.core.prune.Pruner` /
+        :class:`~repro.core.prune.CascadePruner` instance, and per chunk:
 
-        1. *prune*: admissible lower bounds lb (Qc, N), one batched pass;
+        1. *prune*: admissible lower bounds, one batched pass. Full-sweep
+           pruners score every (query, doc) pair; a cascade first
+           shortlists via the index's IVF clusters (``nprobe`` nearest per
+           query; ``None`` = all = exact), bounds only the shortlist, and
+           computes each later (costlier) bound only on the docs the
+           previous stage could not exclude;
         2. *solve* (seed): exact Sinkhorn on the union of each query's k
            best-bounded docs, gathered into a trimmed ELL subset slice;
            the per-query kth-smallest exact distance becomes the pruning
-           threshold t_q — any doc with lb > t_q cannot enter the top-k;
+           threshold t_q — any doc with lb > t_q cannot enter the top-k.
+           Seed selection and thresholding run device-side (top_k / sort
+           on the bound matrices); only compact id arrays reach the host;
         3. *solve* (survivors): exact Sinkhorn on the docs whose bound
            passes t_q (+ ``prune_slack`` fp margin);
         4. *rank*: merge and argsort the exact distances.
@@ -556,7 +756,11 @@ class WmdEngine:
         bounds the *computed* truncated-Sinkhorn score; ``"wcd"`` alone
         bounds exact EMD and is exact only up to the iteration's
         query-marginal residual vs ``prune_slack`` — near-exact at
-        practical ``n_iter``, see :mod:`repro.core.prune`.
+        practical ``n_iter``, see :mod:`repro.core.prune`. A cascade at
+        ``nprobe < n_clusters`` is *approximate*: un-probed clusters are
+        never scored, recall is measured (monotone in ``nprobe``), and a
+        query with fewer than k reachable candidates pads its result row
+        with ``-1`` / NaN.
         """
         queries = [np.asarray(q) for q in queries]
         n = self.index.n_docs
@@ -567,7 +771,7 @@ class WmdEngine:
         out_i = np.full((nq, k), -1, np.int32)
         out_d = np.full((nq, k), np.nan, self.dtype)
         solved = np.zeros(nq, np.int64)
-        if nq == 0:
+        if nq == 0 or n == 0:
             return SearchResult(out_i, out_d, solved)
 
         if prune is None:
@@ -580,41 +784,144 @@ class WmdEngine:
                 solved[qi] = n
             return SearchResult(out_i, out_d, solved)
 
-        from .prune import resolve_pruner
+        from .prune import CascadePruner, resolve_pruner
         pruner = resolve_pruner(prune, use_kernel=(self.impl == "kernel"),
-                                interpret=self.interpret)
+                                interpret=self.interpret, nprobe=nprobe)
         _, chunks = self._plan(queries)
+        if isinstance(pruner, CascadePruner):
+            if chunks:
+                self._search_cascade(queries, k, pruner, nprobe, chunks,
+                                     out_i, out_d, solved)
+            return SearchResult(out_i, out_d, solved)
         for chunk, width in chunks:
             cq = [queries[qi] for qi in chunk]
+            qc = len(chunk)
             sup, r, mask = self._prep_chunk(cq, width)
-            lb = np.asarray(pruner.lower_bounds(self.index, sup, r,
-                                                mask))[:len(chunk)]
             kq = self._kq(sup, mask)              # shared by both solves
 
-            def solve(doc_ids):                   # -> (len(chunk), |ids|)
+            def solve(doc_ids):     # -> (qc, |ids|) np, NaN-checked
                 w = np.asarray(self._solve_group(
                     kq, r, mask, self.index.subset(doc_ids)))
-                w = w[:len(chunk), :doc_ids.size]  # drop q/doc shape padding
+                w = w[:qc, :doc_ids.size]  # drop q/doc shape padding
                 self._raise_if_nan(w, cq)
                 return w
 
-            # seed: each query's k best-bounded docs (chunk union — extra
-            # exact distances only tighten the other queries' thresholds)
-            seed = np.unique(np.argpartition(lb, k - 1, axis=1)[:, :k])
-            d_seed = solve(seed)
-            # threshold: kth-smallest exact distance known per query; any
-            # doc with lb > t cannot displace the k already-solved ones
-            t = np.partition(d_seed, k - 1, axis=1)[:, k - 1]
-            margin = self.prune_slack * (np.abs(t) + 1.0)
-            keep = lb <= (t + margin)[:, None]
-            keep[:, seed] = False
-            surv = np.nonzero(keep.any(axis=0))[0]
-            # rank over the compact candidate set only — never (Q, N)
-            cand = np.concatenate([seed, surv])
-            d_cand = (np.concatenate([d_seed, solve(surv)], axis=1)
-                      if surv.size else d_seed)
+            cand, d_cand = self._prune_full(pruner, sup, r, mask, qc, k,
+                                            solve)
             for ci, qi in enumerate(chunk):
                 order = np.argsort(d_cand[ci], kind="stable")[:k]
-                out_i[qi], out_d[qi] = cand[order], d_cand[ci, order]
+                out_i[qi, :order.size] = cand[order]
+                out_d[qi, :order.size] = d_cand[ci, order]
                 solved[qi] = cand.size
         return SearchResult(out_i, out_d, solved)
+
+    def _threshold(self, d_seed_dev, k: int, n_seed: int):
+        """Device-side pruning threshold: per-query kth-smallest exact
+        distance among the solved seeds (+ fp slack margin). With fewer
+        than k solved docs nothing may be excluded yet -> +inf."""
+        if n_seed >= k:
+            t = jnp.sort(d_seed_dev, axis=1)[:, k - 1]
+        else:
+            t = jnp.full((d_seed_dev.shape[0],), jnp.inf,
+                         d_seed_dev.dtype)
+        return t + self.prune_slack * (jnp.abs(t) + 1.0)
+
+    def _prune_full(self, pruner, sup, r, mask, qc, k, solve):
+        """PR 2's full-sweep prune stage, with seed selection and
+        thresholding moved device-side: (Qc, N) argpartition/partition
+        become top_k/sort on the device bound matrix, and only compact id
+        arrays (seeds, the survivor bitmap) cross to the host."""
+        from .prune import _keep_any
+        lb = pruner.lower_bounds(self.index, sup, r, mask)   # (Qp, N) dev
+        # seed: each query's k best-bounded docs (chunk union — extra
+        # exact distances only tighten the other queries' thresholds)
+        _, seed_pos = jax.lax.top_k(-lb[:qc], k)
+        seed = np.unique(np.asarray(seed_pos)).astype(np.int32)
+        d_seed = solve(seed)
+        thresh = self._threshold(jnp.asarray(d_seed), k, seed.size)
+        surv = np.nonzero(np.asarray(_keep_any(lb, thresh)))[0] \
+            .astype(np.int32)
+        surv = surv[~np.isin(surv, seed)]
+        cand = np.concatenate([seed, surv])
+        d_cand = (np.concatenate([d_seed, solve(surv)], axis=1)
+                  if surv.size else d_seed)
+        return cand, d_cand
+
+    def _search_cascade(self, queries, k, pruner, nprobe, chunks,
+                        out_i, out_d, solved):
+        """CascadePruner driver — sub-O(N) per-doc prune work, ONE global
+        prune pass for the whole query set:
+
+        The bound stages don't need the solve's v_r bucketing (they read
+        the (Q, B) support arrays directly), so all live queries are staged
+        once at the widest chunk's bucket and every prune dispatch covers
+        the full set — per-chunk pruning would pay the fixed dispatch
+        chain per v_r bucket for no extra precision. Flow:
+
+        1. cluster probe (one (Q, C) GEMM) + seed candidates from each
+           query's nearest probed clusters (just enough to cover k docs);
+        2. first-stage bounds on the seed candidates -> per-query best-k
+           seeds -> exact seed solve (per solve chunk) -> threshold t_q;
+        3. ``pruner.survivors``: cluster-radius triangle bound drops whole
+           clusters, then the per-doc stages cheapest-first on what
+           remains;
+        4. exact solve on the final survivors, rank.
+        """
+        from .prune import _pad_pow2_ids
+        index = self.index
+        live_q = [qi for chunk, _ in chunks for qi in chunk]
+        qg = len(live_q)
+        width_g = max(width for _, width in chunks)
+        sup_g, r_g, mask_g = self._prep_chunk(
+            [queries[qi] for qi in live_q], width_g)
+        cdists, pm, qcent = pruner.probe(index, sup_g, r_g, mask_g, nprobe)
+        seed_cand = pruner.seed_candidates(index, cdists, mask_g, k, pm)
+        if seed_cand.size == 0:
+            return
+        sp = _pad_pow2_ids(seed_cand)
+        lb = pruner.stage_bounds(
+            pruner.stages[0], index, sup_g, r_g, mask_g, sp,
+            seed_cand.size,
+            pruner.id_qmask(index, pm, sp, seed_cand.size,
+                            qp=sup_g.shape[0]), qcent=qcent)
+        k_eff = min(k, seed_cand.size)
+        neg, seed_pos = jax.lax.top_k(-lb[:qg], k_eff)
+        seed_pos = np.asarray(seed_pos)
+        # -inf picks are non-candidates (a query with < k_eff candidates)
+        pos_seed = np.unique(seed_pos[np.isfinite(np.asarray(neg))])
+        pos_seed = pos_seed[pos_seed < seed_cand.size]
+        if pos_seed.size == 0:
+            return
+        seed = sp[pos_seed]
+
+        # solve stage stays v_r-bucketed: per-chunk staging, reused for
+        # the seed and survivor solves
+        row_of = {qi: g for g, qi in enumerate(live_q)}
+        prepped = []
+        for chunk, width in chunks:
+            cq = [queries[qi] for qi in chunk]
+            sup, r, mask = self._prep_chunk(cq, width)
+            prepped.append((chunk, cq, sup, r, mask, self._kq(sup, mask)))
+
+        def solve_all(doc_ids):       # -> (qg, |ids|) np, NaN-checked
+            out = np.empty((qg, doc_ids.size), self.dtype)
+            grp = index.subset(doc_ids)   # one gather, shared by chunks
+            for chunk, cq, sup, r, mask, kq in prepped:
+                w = np.asarray(self._solve_group(kq, r, mask, grp))
+                w = w[:len(chunk), :doc_ids.size]
+                self._raise_if_nan(w, cq)
+                out[[row_of[qi] for qi in chunk]] = w
+            return out
+
+        d_seed = solve_all(seed)
+        thresh = self._threshold(jnp.asarray(d_seed), k, seed.size)
+        surv = pruner.survivors(index, sup_g, r_g, mask_g, cdists, pm,
+                                qcent, thresh, exclude=seed)
+        cand = np.concatenate([seed, surv])
+        d_cand = (np.concatenate([d_seed, solve_all(surv)], axis=1)
+                  if surv.size else d_seed)
+        for g, qi in enumerate(live_q):
+            order = np.argsort(d_cand[g], kind="stable")[:k]
+            out_i[qi, :order.size] = cand[order]
+            out_d[qi, :order.size] = d_cand[g, order]
+            solved[qi] = cand.size

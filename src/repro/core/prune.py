@@ -43,12 +43,19 @@ approximately. Hence:
 
 Bounds are in raw distance units (no lam): they bound the transport-cost
 part ``<P, M>``, which is exactly what the solve stage returns.
+
+``CascadePruner`` (ISSUE 3) runs these stages *cheapest-first* over a
+shrinking candidate set — IVF cluster shortlist, WCD on the shortlist,
+RWMD only on WCD survivors (and only over the survivors' own vocabulary) —
+instead of computing every bound on every document; see its docstring for
+the exactness-vs-``nprobe`` contract.
 """
 from __future__ import annotations
 
 import functools
 from typing import Protocol, Sequence, runtime_checkable
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -102,6 +109,14 @@ _min_cdist_xla = jax.jit(rwmd_min_cdist_ref)
 
 
 @jax.jit
+def _min_cdist_subset_xla(sup, mask, vecs, vids):
+    """Candidate-vocab min-cdist with the support/vocab gathers fused in
+    (one dispatch; the XLA twin of kernels.rwmd.rwmd_min_cdist_subset)."""
+    return rwmd_min_cdist_ref(jnp.take(vecs, sup, axis=0), mask,
+                              jnp.take(vecs, vids, axis=0))
+
+
+@jax.jit
 def _rwmd_gather(minm: jax.Array, idx: jax.Array, val: jax.Array):
     """Own jit on purpose: XLA CPU would otherwise fuse the cdist producer
     into the gather and recompute it per element (see ROADMAP note)."""
@@ -151,15 +166,434 @@ class MaxPruner:
         return functools.reduce(jnp.maximum, bounds)
 
 
-PRUNERS = ("wcd", "rwmd", "wcd+rwmd")
+# ---------------------------------------------------------------- cascade
+def _pad_pow2_ids(ids: np.ndarray, min_size: int = 8) -> np.ndarray:
+    """Pow2-pad an id array (pad slots get id 0 — a valid row whose
+    computed bounds are garbage the candidacy masks exclude) so
+    data-dependent candidate counts hit a bounded set of compiled shapes."""
+    n_pad = min_size
+    while n_pad < ids.size:
+        n_pad *= 2
+    out = np.zeros(n_pad, np.int32)
+    out[:ids.size] = ids
+    return out
+
+
+# Fused per-stage jits: each cascade stage is ONE device dispatch (bounds +
+# candidacy fold), plus one tiny dispatch for the threshold compare — the
+# stage arrays are small post-shortlist, so op-by-op dispatch overhead would
+# otherwise dominate the stage compute (measured ~4x on CPU at N=8k).
+
+@jax.jit
+def _wcd_stage(qcent, centroids, ids_pad, qmask):
+    """Centroid bounds for a candidate id array, qmask folded to +inf:
+    gather candidate centroids -> cdist vs the (probe-computed) query
+    centroids -> mask."""
+    cand = jnp.take(centroids, ids_pad, axis=0)          # (Sp, w)
+    a2 = jnp.sum(qcent * qcent, axis=1)[:, None]
+    b2 = jnp.sum(cand * cand, axis=1)[None, :]
+    d2 = a2 + b2 - 2.0 * (qcent @ cand.T)
+    return jnp.where(qmask, jnp.sqrt(jnp.maximum(d2, 0.0)), jnp.inf)
+
+
+@jax.jit
+def _wcd_dense_keep_all(qcent, centroids, thresh):
+    """Exhaustive-probe variant of :func:`_wcd_dense_keep`: every doc is a
+    candidate of every query, so the doc -> probed-cluster lookup drops
+    out of the dispatch entirely."""
+    qc = thresh.shape[0]
+    q = qcent[:qc]
+    a2 = jnp.sum(q * q, axis=1)[:, None]
+    b2 = jnp.sum(centroids * centroids, axis=1)[None, :]
+    d2 = jnp.maximum(a2 + b2 - 2.0 * (q @ centroids.T), 0.0)
+    return jnp.any(d2 <= jnp.square(thresh)[:, None], axis=0)
+
+
+@jax.jit
+def _wcd_dense_keep(qcent, centroids, pm, assign, thresh):
+    """Dense WCD threshold pass, ONE dispatch end to end: per-doc centroid
+    bounds over the whole corpus (no candidate gather, query centroids
+    reused from the probe, squared-distance compare — sqrt is monotone),
+    candidacy via the doc -> probed-cluster lookup, keep = any live
+    query's bound passes. The dispatch-economy twin of the gathered
+    :func:`_wcd_stage` path — the survivor pass picks by surviving-cluster
+    mass (a (Q, N) GEMM beats gather + mask dispatch chains once most docs
+    survive the cluster filter)."""
+    qc = thresh.shape[0]
+    q = qcent[:qc]
+    a2 = jnp.sum(q * q, axis=1)[:, None]
+    b2 = jnp.sum(centroids * centroids, axis=1)[None, :]
+    d2 = jnp.maximum(a2 + b2 - 2.0 * (q @ centroids.T), 0.0)
+    cand = jnp.take(pm[:qc], assign, axis=1)             # (qc, N) candidacy
+    return jnp.any(cand & (d2 <= jnp.square(thresh)[:, None]), axis=0)
+
+
+@jax.jit
+def _rwmd_epilogue(minm, rel, val, qmask):
+    """RWMD gather + doc-mass contraction + candidacy fold, one dispatch.
+    Separate from the min-cdist producer on purpose (the XLA CPU
+    producer-into-gather refusion hazard — see the ROADMAP note)."""
+    g = jnp.take(jnp.where(jnp.isfinite(minm), minm, 0.0), rel, axis=1)
+    lb = jnp.einsum("qnl,nl->qn", g, val)
+    return jnp.where(qmask, lb, jnp.inf)
+
+
+@jax.jit
+def _rwmd_keep(minm, rel, val, pm, assign_ids, n_real, thresh):
+    """:func:`_rwmd_epilogue` fused with candidacy lookup and the
+    threshold test — the post-threshold RWMD stage in one dispatch after
+    the min-cdist producer."""
+    qc = thresh.shape[0]
+    g = jnp.take(jnp.where(jnp.isfinite(minm), minm, 0.0), rel, axis=1)
+    lb = jnp.einsum("qnl,nl->qn", g[:qc], val)
+    cand = (jnp.take(pm[:qc], assign_ids, axis=1)
+            & (jnp.arange(assign_ids.shape[0])[None, :] < n_real))
+    return jnp.any(cand & (lb <= thresh[:, None]), axis=0)
+
+
+@jax.jit
+def _rwmd_keep_all(minm, rel, val, n_real, thresh):
+    """Exhaustive-probe variant of :func:`_rwmd_keep` (no cluster
+    candidacy lookup; only the pad tail is masked)."""
+    qc = thresh.shape[0]
+    g = jnp.take(jnp.where(jnp.isfinite(minm), minm, 0.0), rel, axis=1)
+    lb = jnp.einsum("qnl,nl->qn", g[:qc], val)
+    keep = jnp.any(lb <= thresh[:, None], axis=0)
+    return keep & (jnp.arange(rel.shape[0]) < n_real)
+
+
+@jax.jit
+def _keep_any(lbm, thresh):
+    """Columns any live query still needs: lbm (Qp, Sp) with +inf at
+    non-candidates, thresh (qc,) margined thresholds -> (Sp,) bool."""
+    return jnp.any(lbm[:thresh.shape[0]] <= thresh[:, None], axis=0)
+
+
+@jax.jit
+def _cluster_keep_fused(cdists, radii, pm, thresh):
+    """Cluster-radius filter, one dispatch: triangle bound + candidacy +
+    threshold test -> (C,) bool of clusters some live query still needs."""
+    lbm = jnp.where(pm, cdists - radii[None, :], jnp.inf)
+    return jnp.any(lbm[:thresh.shape[0]] <= thresh[:, None], axis=0)
+
+
+@jax.jit
+def _cluster_keep_all(cdists, radii, thresh):
+    """Exhaustive-probe variant of :func:`_cluster_keep_fused`."""
+    lbm = cdists - radii[None, :]
+    return jnp.any(lbm[:thresh.shape[0]] <= thresh[:, None], axis=0)
+
+
+@jax.jit
+def _probe_dists(sup, r, mask, vecs, centers):
+    """Query centroids + cluster-center distances, one dispatch:
+    (cdists (Qp, C), qcent (Qp, w) — reused by the dense WCD pass)."""
+    qcent = jnp.einsum("qb,qbw->qw", r * mask, jnp.take(vecs, sup, axis=0))
+    a2 = jnp.sum(qcent * qcent, axis=1)[:, None]
+    b2 = jnp.sum(centers * centers, axis=1)[None, :]
+    d2 = a2 + b2 - 2.0 * (qcent @ centers.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0)), qcent
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def _probe_mask(cdists, nprobe: int):
+    """(Qp, C) bool: True at each query's ``nprobe`` nearest clusters."""
+    _, idx = jax.lax.top_k(-cdists, nprobe)
+    rows = jnp.arange(cdists.shape[0])[:, None]
+    return jnp.zeros(cdists.shape, bool).at[rows, idx].set(True)
+
+
+@jax.jit
+def _ids_qmask(pm, assign_ids, n_real):
+    """Per-query candidacy for a padded doc-id array: the doc's cluster
+    must be probed by the query, and the slot must be real (``n_real`` is
+    traced, so shape bucketing stays data-independent)."""
+    sub = jnp.take(pm, assign_ids, axis=1)
+    return sub & (jnp.arange(assign_ids.shape[0])[None, :] < n_real)
+
+
+class CascadePruner:
+    """Cheapest-first cascade over a shrinking candidate set: IVF cluster
+    probe + cluster-radius filter -> per-doc WCD -> RWMD min-cdist.
+
+    Unlike the full-sweep pruners above (one (Q, N) bound matrix), the
+    cascade's per-doc work is sub-O(N):
+
+    1. *ivf probe*: one (Q, n_clusters) GEMM against the frozen k-means
+       centers. ``nprobe`` nearest clusters per query define the candidate
+       universe (all clusters when ``nprobe=None`` — the exact mode). Seed
+       docs come from each query's nearest probed clusters (just enough to
+       cover k members), so even seed selection never sweeps the corpus.
+    2. *ivf radius filter*: after the seed solve fixes the threshold t_q,
+       the triangle inequality ``wcd(q, n) >= ||qcent - center_c|| -
+       radius_c`` (:class:`~.index.IvfClusters` ``radii``) drops whole
+       clusters against t_q — their members are never touched again.
+    3. *wcd*: the centroid bound, only on surviving clusters' members.
+    4. *rwmd*: the tight bound, only on WCD survivors — and only over the
+       vocabulary those survivors actually use, so the min-cdist block
+       shrinks from (Q*B, V) to (Q*B, V_survivors)
+       (:func:`repro.kernels.rwmd.rwmd_min_cdist_subset`).
+
+    Admissibility: the radius bound under-estimates WCD (triangle
+    inequality), so at ``nprobe = n_clusters`` the drop set is contained
+    in the ``"wcd+rwmd"`` :class:`MaxPruner`'s-with-cluster-bounds and the
+    exact-top-k story is identical to ``"wcd+rwmd"`` — guaranteed through
+    the RWMD stage, near-exact through WCD's truncated-iteration caveat
+    above (the cluster bound inherits the same caveat: it lower-bounds
+    WCD). At smaller ``nprobe`` un-probed clusters are skipped entirely:
+    approximate retrieval with *measured* recall, monotone in ``nprobe``
+    for a fixed query batch (probe sets are nested, and every returned
+    doc carries its exact distance — the result contains at least the
+    top-k of the query's own probed universe, plus any batch-mates' union
+    candidates that rank better, which can only raise recall).
+
+    The driver is :meth:`WmdEngine.search <repro.core.index.WmdEngine>`;
+    this class owns the stage computations.
+    """
+
+    def __init__(self, stages: Sequence[str] = ("wcd", "rwmd"),
+                 nprobe: int | None = None, use_kernel: bool = False,
+                 interpret: bool | None = None):
+        stages = tuple(stages)
+        if not stages or any(s not in ("wcd", "rwmd") for s in stages):
+            raise ValueError(f"cascade stages must be drawn from "
+                             f"('wcd', 'rwmd'), got {stages!r}")
+        self.stages = stages
+        self.nprobe = nprobe
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.name = "+".join(("ivf",) + stages)
+
+    # -------------------------------------------------------- stage 0: ivf
+    def probe(self, index, sup, r, mask, nprobe: int | None = None):
+        """Cluster probe for one query staging: (cdists (Qp, C) device,
+        pm (Qp, C) device bool — True at each query's probed clusters,
+        qcent (Qp, w) query centroids for downstream reuse).
+        ``nprobe=None`` uses the pruner's default, which itself defaults
+        to all clusters."""
+        cl = index.clusters
+        if cl is None:
+            raise ValueError(
+                "CorpusIndex has no IVF clusters — rebuild with "
+                "build_index() (clusters are built by default)")
+        if nprobe is None:
+            nprobe = self.nprobe
+        c = cl.n_clusters
+        np_eff = c if nprobe is None else max(1, min(int(nprobe), c))
+        cdists, qcent = _probe_dists(sup, r, mask, index.vecs, cl.centers)
+        # pm None == exhaustive probe: every cluster is every query's
+        # candidate, and the hot stages skip the candidacy lookups
+        pm = None if np_eff == c else _probe_mask(cdists, np_eff)
+        return cdists, pm, qcent
+
+    def seed_candidates(self, index, cdists, mask, k: int,
+                        pm) -> np.ndarray:
+        """Seed-candidate doc ids: per live query, walk probed clusters
+        nearest-first until they cover k members; the union across the
+        chunk is returned (host — O(Q * C), never O(N))."""
+        cl = index.clusters
+        sizes = cl.sizes
+        cd = np.asarray(cdists)
+        pm_np = None if pm is None else np.asarray(pm)
+        live = np.asarray(mask).sum(axis=1) > 0
+        chosen = np.zeros(cl.n_clusters, bool)
+        for q in np.nonzero(live)[0]:
+            covered = 0
+            for c in np.argsort(cd[q], kind="stable"):
+                if (pm_np is not None and not pm_np[q, c]) or sizes[c] == 0:
+                    continue
+                chosen[c] = True
+                covered += sizes[c]
+                if covered >= k:
+                    break
+        picked = np.nonzero(chosen)[0]
+        if picked.size == 0:
+            return np.zeros(0, np.int32)
+        return np.sort(np.concatenate(
+            [cl.order[cl.starts[c]:cl.starts[c + 1]] for c in picked]))
+
+    def id_qmask(self, index, pm, ids_pad: np.ndarray, n_real: int,
+                 qp: int | None = None) -> jax.Array:
+        """(Qp, Sp) candidacy for a padded id array (see _ids_qmask).
+        ``pm=None`` (exhaustive probe) needs ``qp`` to shape the valid-slot
+        mask."""
+        if pm is None:
+            valid = jnp.arange(ids_pad.size) < n_real
+            return jnp.broadcast_to(valid[None, :], (qp, ids_pad.size))
+        assign_ids = jnp.asarray(
+            index.clusters.assign[ids_pad].astype(np.int32))
+        return _ids_qmask(pm, assign_ids, n_real)
+
+    def cluster_keep(self, index, cdists, pm, thresh) -> np.ndarray:
+        """(C,) host bool: clusters some live query still needs, by the
+        cluster-radius triangle bound against the threshold."""
+        radii = index.clusters.radii.astype(np.float32)
+        if pm is None:
+            return np.asarray(_cluster_keep_all(cdists, radii, thresh))
+        return np.asarray(_cluster_keep_fused(cdists, radii, pm, thresh))
+
+    def cluster_members(self, index, keep_c: np.ndarray) -> np.ndarray:
+        """Sorted doc ids of the kept clusters (host slice concat)."""
+        cl = index.clusters
+        kept = np.nonzero(keep_c[:cl.n_clusters])[0]
+        if kept.size == 0:
+            return np.zeros(0, np.int32)
+        return np.sort(np.concatenate(
+            [cl.order[cl.starts[c]:cl.starts[c + 1]] for c in kept]))
+
+    # --------------------------------------- post-threshold survivor pass
+    def survivors(self, index, sup, r, mask, cdists, pm, qcent, thresh,
+                  exclude: np.ndarray | None = None,
+                  dense_cutoff: float = 0.25) -> np.ndarray:
+        """The post-threshold prune pass, cheapest-first: cluster-radius
+        filter, then the per-doc stages on what remains. Returns surviving
+        doc ids (``exclude`` — typically the already-solved seeds —
+        removed). Shared by ``WmdEngine._prune_cascade`` and the fig9
+        prune-stage benchmark, so the measured pass IS the serving pass.
+
+        When the cluster filter keeps most of the corpus (loose clusters,
+        or simply a hard query), the gathered per-doc WCD stage is replaced
+        by :func:`_wcd_dense_keep` — one dense dispatch over all docs beats
+        gather + mask dispatch chains precisely when the gather wouldn't
+        shrink the problem (the radius bound under-estimates every
+        member's WCD, so the dense threshold test subsumes the cluster
+        filter)."""
+        cl = index.clusters
+        radii = cl.radii.astype(np.float32)
+        stages = self.stages
+        # dispatch the cluster filter and the (speculative) dense WCD pass
+        # back to back, then sync once — the dense result is discarded in
+        # the rare tight-cluster case where the gather path wins, but the
+        # serial dispatch->sync->dispatch latency it saves dominates its
+        # (Q, N) GEMM cost on every other call
+        if pm is None:
+            keep_c_dev = _cluster_keep_all(cdists, radii, thresh)
+            keep_d_dev = (_wcd_dense_keep_all(qcent, index.centroids,
+                                              thresh)
+                          if stages[0] == "wcd" else None)
+        else:
+            keep_c_dev = _cluster_keep_fused(cdists, radii, pm, thresh)
+            keep_d_dev = (_wcd_dense_keep(qcent, index.centroids, pm,
+                                          cl.assign_dev, thresh)
+                          if stages[0] == "wcd" else None)
+        keep_c = np.asarray(keep_c_dev)
+        kept_docs = int(cl.sizes[keep_c[:cl.n_clusters]].sum())
+        if (keep_d_dev is not None
+                and kept_docs >= dense_cutoff * index.n_docs):
+            surv = np.nonzero(np.asarray(keep_d_dev))[0].astype(np.int32)
+            stages = stages[1:]
+        else:
+            surv = self.cluster_members(index, keep_c)
+        if exclude is not None and exclude.size and surv.size:
+            surv = surv[~np.isin(surv, exclude)]
+        for stage in stages:
+            if surv.size == 0:
+                break
+            sp = _pad_pow2_ids(surv)
+            if stage == "rwmd":
+                prep = self._rwmd_prep(index, sup, mask, sp, surv.size)
+                if prep is None:
+                    break
+                minm, rel, val = prep
+                rel, val = jnp.asarray(rel), jnp.asarray(val)
+                if pm is None:
+                    keep = np.asarray(_rwmd_keep_all(
+                        minm, rel, val, surv.size, thresh))
+                else:
+                    assign_ids = jnp.asarray(cl.assign[sp].astype(np.int32))
+                    keep = np.asarray(_rwmd_keep(
+                        minm, rel, val, pm, assign_ids, surv.size, thresh))
+            else:
+                lbm = self.stage_bounds(
+                    stage, index, sup, r, mask, sp, surv.size,
+                    self.id_qmask(index, pm, sp, surv.size,
+                                  qp=sup.shape[0]), qcent=qcent)
+                keep = np.asarray(_keep_any(lbm, thresh))
+            surv = surv[keep[:surv.size]]
+        return surv
+
+    # ----------------------------------------------------- bounded stages
+    def stage_bounds(self, stage: str, index, sup, r, mask,
+                     ids_pad: np.ndarray, n_real: int, qmask: jax.Array,
+                     qcent: jax.Array | None = None) -> jax.Array:
+        """Masked lower bounds for one cascade stage on a candidate id
+        array: (Qp, Sp) device, +inf wherever ``qmask`` is False (pad
+        slots and per-query non-candidates). One fused dispatch per stage
+        (plus the min-cdist producer for RWMD). Pass the ``qcent`` the
+        probe already computed to skip recomputing query centroids."""
+        if stage == "wcd":
+            if qcent is None:
+                qcent = _query_centroids(sup, r, mask, index.vecs)
+            return _wcd_stage(qcent, index.centroids,
+                              jnp.asarray(ids_pad), qmask)
+        return self._rwmd_subset(index, sup, mask, ids_pad, n_real, qmask)
+
+    def _rwmd_prep(self, index, sup, mask, ids_pad, n_real):
+        """Shared RWMD-subset prep: gather candidate rows host-side (like
+        ``CorpusIndex.subset``), remap their word ids into the compact
+        candidate-vocab space, min-cdist only those embedding rows — the
+        (Q*B, V) block shrinks to (Q*B, V_survivors). Returns
+        (minm device, rel np, val np) or None when the subset is empty."""
+        idx = index.docs_host.idx[ids_pad]
+        val = index.docs_host.val[ids_pad].copy()
+        val[n_real:] = 0.0                    # pad rows out of the vocab
+        nnz = (val > 0).sum(axis=1)
+        lg = max(1, int(nnz.max(initial=0)))
+        lg = min(-(-lg // 8) * 8, idx.shape[1])
+        idx, val = idx[:, :lg], val[:, :lg]
+        live = val > 0
+        vids = np.unique(idx[live])
+        if vids.size == 0:
+            return None
+        rel = np.searchsorted(vids, idx).astype(np.int32)
+        rel[~live] = 0
+        # pow2-bucket the candidate vocab so data-dependent survivor sets
+        # don't compile a fresh min-cdist per step (pad ids repeat vids[0];
+        # the padded columns are computed but never gathered)
+        vids_pad = _pad_pow2_ids(vids, min_size=128)
+        vids_pad[vids.size:] = vids[0]
+        if self.use_kernel:
+            from repro.kernels import ops
+            minm = ops.rwmd_min_cdist(
+                jnp.take(index.vecs, sup, axis=0), mask, index.vecs,
+                interpret=self.interpret,
+                vocab_ids=jnp.asarray(vids_pad, jnp.int32))
+        else:
+            minm = _min_cdist_subset_xla(sup, mask, index.vecs,
+                                         jnp.asarray(vids_pad, jnp.int32))
+        return minm, rel, val
+
+    def _rwmd_subset(self, index, sup, mask, ids_pad, n_real, qmask):
+        """Masked RWMD bounds on a candidate subset (see _rwmd_prep)."""
+        prep = self._rwmd_prep(index, sup, mask, ids_pad, n_real)
+        if prep is None:
+            return jnp.where(qmask, 0.0, jnp.inf)
+        minm, rel, val = prep
+        return _rwmd_epilogue(minm, jnp.asarray(rel), jnp.asarray(val),
+                              qmask)
+
+
+PRUNERS = ("wcd", "rwmd", "wcd+rwmd", "ivf", "ivf+wcd", "ivf+rwmd",
+           "ivf+wcd+rwmd")
 
 
 def resolve_pruner(spec, use_kernel: bool = False,
-                   interpret: bool | None = None) -> Pruner:
-    """Turn a spec (``"wcd"``, ``"rwmd"``, ``"wcd+rwmd"``, or any object
-    implementing :class:`Pruner`) into a pruner instance."""
+                   interpret: bool | None = None,
+                   nprobe: int | None = None):
+    """Turn a spec (``"wcd"``, ``"rwmd"``, ``"wcd+rwmd"``, a cascaded
+    ``"ivf[+wcd][+rwmd]"``, or a :class:`Pruner`/:class:`CascadePruner`
+    instance) into a pruner instance. ``nprobe`` applies to cascades only
+    (``None`` probes every cluster — the exact mode)."""
     if isinstance(spec, str):
         parts = [p.strip() for p in spec.replace(",", "+").split("+") if p]
+        if parts and parts[0] == "ivf":
+            stages = tuple(parts[1:]) or ("wcd", "rwmd")
+            return CascadePruner(stages=stages, nprobe=nprobe,
+                                 use_kernel=use_kernel, interpret=interpret)
+        if nprobe is not None:
+            raise ValueError(
+                f"nprobe={nprobe} only applies to ivf cascades; "
+                f"{spec!r} sweeps every document")
         made = []
         for p in parts:
             if p == "wcd":
@@ -174,6 +608,16 @@ def resolve_pruner(spec, use_kernel: bool = False,
         if not made:
             raise ValueError(f"empty pruner spec {spec!r}")
         return made[0] if len(made) == 1 else MaxPruner(made)
+    if isinstance(spec, CascadePruner):
+        if nprobe is not None and spec.nprobe != nprobe:
+            raise ValueError(
+                f"nprobe={nprobe} conflicts with the CascadePruner's own "
+                f"nprobe={spec.nprobe}; set it on the pruner")
+        return spec
     if isinstance(spec, Pruner):
+        if nprobe is not None:
+            raise ValueError(
+                f"nprobe={nprobe} only applies to ivf cascades; "
+                f"{type(spec).__name__} sweeps every document")
         return spec
     raise TypeError(f"prune must be a str, None, or Pruner, got {spec!r}")

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .sinkhorn import cdist
+from .sinkhorn import LamUnderflowError, cdist, underflow_report
 from .sparse import PaddedDocs
 
 
@@ -80,13 +80,9 @@ def _iterate(pre: SparsePrecompute, n_iter: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("n_iter",))
-def sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
-                        docs: PaddedDocs, lam: float, n_iter: int) -> jax.Array:
-    """Sparse fused Sinkhorn WMD: identical result to the dense Alg. 1.
-
-    Padding entries (val == 0) produce w == 0 and therefore contribute
-    nothing — exactly the entries the dense version masks away with c.
-    """
+def _sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
+                         docs: PaddedDocs, lam: float,
+                         n_iter: int) -> jax.Array:
     pre = precompute_sparse(r, vecs_sel, vecs, docs, lam)
     x = _iterate(pre, n_iter)
     u = 1.0 / x
@@ -95,6 +91,27 @@ def sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
     # wmd[j] = sum_k u[k,j] * sum_l GM[k,j,l] w[j,l]   (paper's final line);
     # GM reconstructed from G, never stored
     return jnp.einsum("kn,knl,nl->n", u, reconstruct_gm(pre.G, lam), w)
+
+
+def sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
+                        docs: PaddedDocs, lam: float, n_iter: int,
+                        check_underflow: bool = True) -> jax.Array:
+    """Sparse fused Sinkhorn WMD: identical result to the dense Alg. 1.
+
+    Padding entries (val == 0) produce w == 0 and therefore contribute
+    nothing — exactly the entries the dense version masks away with c.
+
+    Like the engine and ``one_to_many``, a ``K = exp(-lam*M)`` underflow
+    raises :class:`~repro.core.sinkhorn.LamUnderflowError` with a host-side
+    diagnosis instead of returning NaN distances. The check syncs the (N,)
+    result; pass ``check_underflow=False`` to keep dispatch async (callers
+    that run their own guard, e.g. ``one_to_many``, do).
+    """
+    out = _sinkhorn_wmd_sparse(r, vecs_sel, vecs, docs, lam, n_iter)
+    if (check_underflow and r.shape[0] > 0
+            and bool(jnp.isnan(out).any())):
+        raise LamUnderflowError(underflow_report(lam, vecs_sel, vecs, docs))
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("n_iter",))

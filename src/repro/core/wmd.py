@@ -51,7 +51,9 @@ def one_to_many(r_full, docs: PaddedDocs, vecs, lam: float = 10.0,
     r, vecs_sel, _ = select_support(r_full, vecs, dtype)
 
     if impl == "sparse":
-        out = sinkhorn_wmd_sparse(r, vecs_sel, vecs, docs, lam, n_iter)
+        # the unified check below covers this impl — skip the solver's own
+        out = sinkhorn_wmd_sparse(r, vecs_sel, vecs, docs, lam, n_iter,
+                                  check_underflow=False)
     elif impl == "sparse_unfused":
         out = sinkhorn_wmd_sparse_unfused(r, vecs_sel, vecs, docs, lam,
                                           n_iter)

@@ -31,7 +31,6 @@ LAYERS.TP_AXIS = "model"     # activation sharding constraints live
 # DP_AXES set per-mesh in run_cell
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
-from repro.models import transformer as T
 from repro.runtime import sharding as SH
 from repro.runtime.analysis import (analytic_hbm_bytes, hlo_collective_bytes,
                                     jaxpr_cost, roofline_terms)
@@ -71,9 +70,9 @@ def pick_microbatch(cfg, gb: int, seq: int, data_shards: int,
                     budget_bytes: float = 3e9) -> int | None:
     """Largest microbatch whose sqrt-remat residuals fit the budget."""
     import math
-    l = cfg.num_layers
-    g = max(1, int(math.sqrt(l)))
-    live = g + l // g
+    nl = cfg.num_layers
+    g = max(1, int(math.sqrt(nl)))
+    live = g + nl // g
     full_tok = gb * seq / data_shards
     h_bytes = full_tok * cfg.d_model * 2 * live
     if h_bytes <= budget_bytes:

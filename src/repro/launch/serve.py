@@ -15,6 +15,8 @@ only the surviving candidates, rank):
         --impl kernel --batch-queries 8
     PYTHONPATH=src python -m repro.launch.serve --wmd --n-docs 2048 \
         --top-k 10 --prune rwmd
+    PYTHONPATH=src python -m repro.launch.serve --wmd --n-docs 8192 \
+        --top-k 10 --prune ivf+wcd+rwmd --nprobe 8   # sub-O(Q*N) prune
 """
 from __future__ import annotations
 
@@ -62,18 +64,22 @@ def serve_wmd(args) -> None:
                          n_docs=args.n_docs, n_queries=8, seed=0)
     # corpus side frozen ONCE; every request after this touches only its
     # own (v_r, ...) slice of work
-    engine = WmdEngine(build_index(corpus.docs, corpus.vecs), lam=args.lam,
-                       n_iter=args.n_iter, impl=args.impl)
+    index = build_index(corpus.docs, corpus.vecs,
+                        n_clusters=args.n_clusters)
+    engine = WmdEngine(index, lam=args.lam, n_iter=args.n_iter,
+                       impl=args.impl)
     reqs = wmd_request_stream(corpus)
     bq = max(1, args.batch_queries)
     prune = None if args.prune == "none" else args.prune
+    nprobe = args.nprobe if args.nprobe > 0 else None
     times = []
     solved = []
     for i in range(args.steps):
         batch = [next(reqs) for _ in range(bq)]
         t0 = time.time()
         if args.top_k > 0:
-            res = engine.search(batch, args.top_k, prune=prune)
+            res = engine.search(batch, args.top_k, prune=prune,
+                                nprobe=nprobe)
             jax.block_until_ready(res.distances)
             solved.append(float(res.solved.mean()))
             if i == 0:
@@ -99,6 +105,9 @@ def serve_wmd(args) -> None:
         rec["top_k"] = args.top_k
         rec["prune"] = args.prune
         rec["solved_frac"] = round(float(np.mean(solved)) / args.n_docs, 4)
+        if args.prune.startswith("ivf"):
+            rec["n_clusters"] = index.clusters.n_clusters
+            rec["nprobe"] = nprobe if nprobe else index.clusters.n_clusters
     print(json.dumps(rec))
 
 
@@ -115,8 +124,17 @@ def main() -> None:
                     help="> 0: staged top-k retrieval (prune->solve->rank) "
                          "instead of exhaustive scoring")
     ap.add_argument("--prune", default="rwmd",
-                    choices=["none", "wcd", "rwmd", "wcd+rwmd"],
-                    help="lower bound for the prune stage (with --top-k)")
+                    choices=["none", "wcd", "rwmd", "wcd+rwmd", "ivf+wcd",
+                             "ivf+rwmd", "ivf+wcd+rwmd"],
+                    help="lower bound / cascade for the prune stage "
+                         "(with --top-k)")
+    ap.add_argument("--nprobe", type=int, default=0,
+                    help="ivf cascades: probe this many clusters per query "
+                         "(0 = all = exact top-k; fewer trades recall for "
+                         "prune speed)")
+    ap.add_argument("--n-clusters", type=int, default=None,
+                    help="IVF cluster count at index build (default: "
+                         "sqrt(n_docs))")
     ap.add_argument("--n-docs", type=int, default=1024)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--embed-dim", type=int, default=64)

@@ -128,7 +128,7 @@ def _flash_fwd_impl(q, k, v, causal, q_offset, block_k):
     acc_t = jnp.float32
 
     def body(carry, i):
-        o, m, l = carry
+        o, m, denom = carry
         kb = lax.dynamic_slice_in_dim(k, i * block_k, block_k, axis=2)
         vb = lax.dynamic_slice_in_dim(v, i * block_k, block_k, axis=2)
         s = jnp.einsum("bghqd,bhkd->bghqk", q, kb,
@@ -137,18 +137,18 @@ def _flash_fwd_impl(q, k, v, causal, q_offset, block_k):
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + p.sum(-1)
+        denom = denom * corr + p.sum(-1)
         o = o * corr[..., None] + jnp.einsum(
             "bghqk,bhkd->bghqd", p.astype(v.dtype), vb,
             preferred_element_type=acc_t)
-        return (o, m_new, l), None
+        return (o, m_new, denom), None
 
     o0 = jnp.zeros((b, g, hkv, tq, d), acc_t)
     m0 = jnp.full((b, g, hkv, tq), NEG_INF, acc_t)
     l0 = jnp.zeros((b, g, hkv, tq), acc_t)
-    (o, m, l), _ = lax.scan(body, (o0, m0, l0), jnp.arange(nb))
-    out = (o / l[..., None]).astype(q.dtype)
-    lse = m + jnp.log(l)
+    (o, m, denom), _ = lax.scan(body, (o0, m0, l0), jnp.arange(nb))
+    out = (o / denom[..., None]).astype(q.dtype)
+    lse = m + jnp.log(denom)
     return out, lse
 
 

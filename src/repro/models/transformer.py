@@ -17,7 +17,6 @@ body gives activation rematerialization in the backward pass.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

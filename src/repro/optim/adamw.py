@@ -23,7 +23,8 @@ class AdamWState(NamedTuple):
 def init(params) -> AdamWState:
     # fp32 moments regardless of param dtype (bf16 moments lose the tail
     # of the second-moment EMA; this is the standard mixed-precision setup)
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree.map(zeros, params),
                       v=jax.tree.map(zeros, params))

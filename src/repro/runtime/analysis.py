@@ -26,11 +26,8 @@ chunks) by orders of magnitude. Two complementary tools fix this:
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
-from typing import Any
-
 import jax
 import numpy as np
 

@@ -1,7 +1,6 @@
 """Per-kernel allclose vs pure-jnp oracles, shape/dtype sweeps (interpret
 mode on CPU; same call sites compile to Mosaic on TPU)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from _hypothesis_compat import given, settings, st

@@ -6,11 +6,10 @@ These are checkable invariants of OUR implementation — hypothesis sweeps
 random corpora."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import one_to_many, select_support
-from repro.core.sparse import PaddedDocs, padded_docs_from_lists
+from repro.core import one_to_many
+from repro.core.sparse import PaddedDocs
 from repro.data.corpus import make_corpus
 
 
@@ -46,9 +45,9 @@ def test_triangle_inequality(seed):
     corp = make_corpus(vocab_size=256, embed_dim=8, n_docs=3, n_queries=0,
                        seed=seed + 77)
     q = [_doc_as_query(corp.docs, j, 256) for j in range(3)]
-    d = lambda i, j: float(one_to_many(q[i], corp.docs, corp.vecs, lam=30.0,
-                                       n_iter=400,
-                                       impl="dense_stabilized")[j])
+    def d(i, j):
+        return float(one_to_many(q[i], corp.docs, corp.vecs, lam=30.0,
+                                 n_iter=400, impl="dense_stabilized")[j])
     dac, dab, dbc = d(0, 2), d(0, 1), d(1, 2)
     assert dac <= dab + dbc + 1e-2, (dac, dab, dbc)
 

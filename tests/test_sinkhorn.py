@@ -4,8 +4,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (one_to_many, select_support, padded_docs_to_dense,
-                        IMPLS)
+from repro.core import one_to_many, padded_docs_to_dense, select_support
 from repro.core.exact_ot import exact_emd
 from repro.core.sinkhorn import cdist
 from repro.data.corpus import make_corpus

@@ -13,7 +13,6 @@ from repro.checkpoint import checkpointer as ckpt
 from repro.runtime import compression as C
 from repro.runtime.fault_tolerance import (Heartbeat, StepGuard, PoisonStep,
                                            scaled_global_batch)
-from repro.core.router import sinkhorn_route
 
 
 def test_pipeline_deterministic_and_host_sharded():
