@@ -6,11 +6,15 @@ from ``main`` (``benchmarks/trajectory/BENCH_<shortsha>.json`` plus a
 record and fails on a wall-time regression:
 
     python -m benchmarks.compare --baseline baseline.json \\
-        --current BENCH_smoke.json --max-ratio 1.3 --prefixes fig7 fig8
+        --current BENCH_smoke.json --max-ratio 1.3 \\
+        --prefixes fig7 fig8 fig10.solve fig10.iters
 
 Only benchmarks whose name starts with one of ``--prefixes`` gate (the
-rest are reported for context). A missing/empty baseline passes with a
-note — the first record on main seeds the trajectory.
+rest are reported for context). ``fig10.iters`` records are realized
+Sinkhorn iteration counts, not wall times — gating them catches
+CONVERGENCE regressions (the adaptive solve suddenly needing more
+iterations) that wall-clock noise would hide. A missing/empty baseline
+passes with a note — the first record on main seeds the trajectory.
 """
 from __future__ import annotations
 
@@ -57,7 +61,7 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--prefixes",
         nargs="+",
-        default=["fig7", "fig8"],
+        default=["fig7", "fig8", "fig10.solve", "fig10.iters"],
         help="bench-name prefixes that gate (others are informational)",
     )
     args = ap.parse_args(argv)

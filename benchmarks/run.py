@@ -13,8 +13,8 @@ import sys
 import traceback
 
 from . import (fig5_scaling, fig6_multi_query, fig7_cdist, fig8_topk_prune,
-               fig9_ivf_prune, moe_router, python_baseline, roofline,
-               table1_profile)
+               fig9_ivf_prune, fig10_solve_adaptive, moe_router,
+               python_baseline, roofline, table1_profile)
 
 MODULES = [
     ("table1_profile", table1_profile),
@@ -24,6 +24,7 @@ MODULES = [
     ("fig7_cdist", fig7_cdist),
     ("fig8_topk_prune", fig8_topk_prune),
     ("fig9_ivf_prune", fig9_ivf_prune),
+    ("fig10_solve_adaptive", fig10_solve_adaptive),
     ("moe_router", moe_router),
     ("roofline", roofline),
 ]

@@ -44,6 +44,21 @@ def main() -> None:
     ap.add_argument("--impl", default="sparse",
                     help="engine: sparse|kernel; --looped accepts any "
                          "repro.core.IMPLS entry")
+    ap.add_argument("--n-clusters", default=None,
+                    help="IVF cluster count at index build (int, or 'auto' "
+                         "to sweep cluster-radius statistics; default "
+                         "sqrt(n_docs))")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "log", "bf16+log"],
+                    help="solve precision policy ('log' is underflow-free "
+                         "at any lam)")
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="> 0: convergence-adaptive solve (exit at this "
+                         "relative doc-marginal residual; 15 iters becomes "
+                         "a cap)")
+    ap.add_argument("--check-every", type=int, default=4,
+                    help="adaptive solve: iterations between residual "
+                         "checks")
     ap.add_argument("--batches", type=int, default=4,
                     help="timed engine passes over the query set")
     ap.add_argument("--looped", action="store_true",
@@ -79,8 +94,13 @@ def main() -> None:
     else:
         prune = None if args.prune == "none" else args.prune
         nprobe = args.nprobe if args.nprobe > 0 else None
-        index = build_index(corpus.docs, corpus.vecs)     # frozen once
-        engine = WmdEngine(index, lam=LAM, n_iter=15, impl=args.impl)
+        index = build_index(corpus.docs, corpus.vecs,
+                            n_clusters=args.n_clusters)   # frozen once;
+        # 'auto'/numeric strings parsed by build_index itself
+        engine = WmdEngine(index, lam=LAM, n_iter=15, impl=args.impl,
+                           tol=args.tol if args.tol > 0 else None,
+                           check_every=args.check_every,
+                           precision=args.precision)
         res = engine.search(queries, args.topk, prune=prune,
                             nprobe=nprobe)                # compile pass
         batch_ms = []
@@ -100,6 +120,11 @@ def main() -> None:
     print(f"\nbatch latency p50={np.percentile(batch_ms, 50):.1f}ms "
           f"({args.queries} queries)  per-query={per_query:.2f}ms  "
           f"throughput={args.n_docs / (per_query / 1e3):,.0f} docs/s/query")
+    if not args.looped and args.tol > 0:
+        iters = engine.iter_stats()
+        if iters.size:
+            print(f"adaptive solve: realized iters mean={iters.mean():.1f} "
+                  f"max={int(iters.max())} (cap 15, tol={args.tol:g})")
 
 
 if __name__ == "__main__":

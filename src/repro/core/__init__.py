@@ -1,13 +1,14 @@
 """Core library: the paper's contribution as composable JAX modules."""
 from .index import (CorpusIndex, DocGroup, IvfClusters, SearchResult,
-                    WmdEngine, append_docs, bucket_size, build_index,
-                    default_n_clusters)
+                    WmdEngine, append_docs, auto_n_clusters, bucket_size,
+                    build_index, default_n_clusters)
 from .prune import (PRUNERS, CascadePruner, MaxPruner, Pruner, RwmdPruner,
                     WcdPruner, resolve_pruner)
 from .sinkhorn import (LamUnderflowError, cdist, precompute, select_support,
                        sinkhorn_wmd_dense, sinkhorn_wmd_dense_stabilized,
                        underflow_report)
-from .sinkhorn_sparse import (precompute_sparse, reconstruct_gm,
+from .sinkhorn_sparse import (SolvePrecision, precompute_sparse,
+                              precompute_sparse_log, reconstruct_gm,
                               sinkhorn_wmd_sparse,
                               sinkhorn_wmd_sparse_unfused)
 from .sparse import (BlockSparse, PaddedDocs, block_density,
@@ -18,11 +19,13 @@ from .router import route, sinkhorn_route, topk_route
 
 __all__ = [
     "CorpusIndex", "DocGroup", "IvfClusters", "SearchResult", "WmdEngine",
-    "append_docs", "bucket_size", "build_index", "default_n_clusters",
+    "append_docs", "auto_n_clusters", "bucket_size", "build_index",
+    "default_n_clusters",
     "PRUNERS", "CascadePruner", "MaxPruner", "Pruner", "RwmdPruner",
     "WcdPruner", "resolve_pruner", "LamUnderflowError",
     "cdist", "precompute", "select_support", "sinkhorn_wmd_dense",
-    "sinkhorn_wmd_dense_stabilized", "underflow_report", "precompute_sparse",
+    "sinkhorn_wmd_dense_stabilized", "underflow_report", "SolvePrecision",
+    "precompute_sparse", "precompute_sparse_log",
     "reconstruct_gm", "sinkhorn_wmd_sparse", "sinkhorn_wmd_sparse_unfused",
     "BlockSparse", "PaddedDocs", "block_density", "block_sparse_from_dense",
     "padded_docs_from_dense", "padded_docs_from_lists",

@@ -33,7 +33,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .sinkhorn import LamUnderflowError, cdist, underflow_report
-from .sinkhorn_sparse import reconstruct_gm
+from .sinkhorn_sparse import (adaptive_loop, marginal_residual,
+                              reconstruct_gm)
 from .sparse import PaddedDocs
 
 
@@ -115,7 +116,9 @@ def _check_underflow(out, lam, vecs_sel, vecs, docs):
 def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
                                     lam: float, n_iter: int, mesh: Mesh,
                                     vshard_precompute: bool = True,
-                                    check_underflow: bool = True):
+                                    check_underflow: bool = True,
+                                    tol: float | None = None,
+                                    check_every: int = 4):
     """ELL fused Sinkhorn with docs sharded over every mesh axis.
 
     ``vshard_precompute=False``: baseline — every chip computes the full
@@ -135,21 +138,33 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     ``K = exp(-lam*M)`` underflow raise :class:`LamUnderflowError` with a
     diagnosis (``check_underflow=False`` opts out — the check syncs the
     sharded result).
+
+    ``tol`` enables the convergence-adaptive loop (ISSUE 4): every
+    ``check_every`` iterations each shard computes its local doc-marginal
+    residual and ONE ``lax.pmax`` over the doc axes all-reduces it, so
+    every shard exits at the same (earliest safe) iteration — the loop
+    stays collective-free except for that scalar. ``n_iter`` becomes a
+    cap (realized counts land on ``1 + k*check_every``, overshooting it
+    by at most ``check_every - 1``).
     """
     doc_axes = _doc_axes(mesh)
     docs_spec = P(doc_axes)
     out_spec = P(doc_axes)
+    # the adaptive path's lax.while_loop has no shard_map replication rule
+    # (jax #workaround) — drop the rep check only when it is in play
+    rep = {} if tol is None else {"check_rep": False}
 
     if not vshard_precompute:
         @functools.partial(
             shard_map, mesh=mesh,
             in_specs=(P(), P(), P(), docs_spec, docs_spec),
-            out_specs=out_spec)
+            out_specs=out_spec, **rep)
         def run(r, vecs_sel, vecs_full, idx_loc, val_loc):
             m = cdist(vecs_sel, vecs_full)                 # replicated (v_r, V)
             k = jnp.exp(-lam * m)
             g = jnp.take(k, idx_loc, axis=1)
-            return _ell_loop(r, g, val_loc, lam, n_iter, doc_axes)
+            return _ell_loop(r, g, val_loc, lam, n_iter, doc_axes,
+                             tol=tol, check_every=check_every)
 
         out = run(r, vecs_sel, vecs, docs.idx, docs.val)
         if check_underflow:
@@ -171,7 +186,7 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P(), P(), P("model"), P(data_axes), P(data_axes)),
-        out_specs=P(data_axes + ("model",)))
+        out_specs=P(data_axes + ("model",)), **rep)
     def run(r, vecs_sel, vecs_loc, idx_loc, val_loc):
         midx = lax.axis_index("model")
         lo = midx * v_loc_size
@@ -188,7 +203,8 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
         n_slice = val_loc.shape[0] // n_model
         val_my = lax.dynamic_slice_in_dim(val_loc, midx * n_slice, n_slice, 0)
         return _ell_loop(r, g, val_my, lam, n_iter,
-                         data_axes + ("model",))
+                         data_axes + ("model",), tol=tol,
+                         check_every=check_every)
 
     out = run(r, vecs_sel, vecs, docs.idx, docs.val)
     if check_underflow:
@@ -196,24 +212,47 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     return out
 
 
-def _ell_loop(r, g, val, lam, n_iter, vary_axes=()):
-    """The collective-free fused SDDMM_SpMM iteration (per shard)."""
+def _ell_loop(r, g, val, lam, n_iter, vary_axes=(), tol=None,
+              check_every: int = 4):
+    """The collective-free fused SDDMM_SpMM iteration (per shard).
+
+    With ``tol`` set, the fixed scan becomes a ``lax.while_loop``: every
+    ``check_every`` iterations each shard computes the doc-marginal
+    residual ``max|val/t - w_prev|`` over its own docs (relative to each
+    doc's marginal scale, live slots only) and one scalar ``lax.pmax``
+    over ``vary_axes`` agrees on the global residual — all shards share
+    one exit decision, so the carries stay consistent for the final
+    distance line.
+    """
     v_r = g.shape[0]
-    n_loc = g.shape[1]
+    n_loc, length = val.shape
     g_over_r = g / r[:, None, None]
     live = val > 0
     x = jnp.full((v_r, n_loc), 1.0 / v_r, dtype=g.dtype)
     if vary_axes:
         x = _pvary(x, tuple(vary_axes))  # match shard-varying carry type
 
-    def body(x, _):
+    def step(carry, _):
+        x, _ = carry
         u = 1.0 / x
         t = jnp.einsum("knl,kn->nl", g, u)
         w = jnp.where(live, val / t, 0.0)
         x = jnp.einsum("knl,nl->kn", g_over_r, w)
-        return x, None
+        return (x, w), None
 
-    x, _ = lax.scan(body, x, None, length=n_iter)
+    if tol is None:
+        # x-only carry — bit-identical to the pre-adaptive loop
+        x, _ = lax.scan(lambda x, _: (step((x, None), None)[0][0], None),
+                        x, None, length=n_iter)
+    else:
+        # the one collective in the loop: a scalar all-reduce so every
+        # shard takes the same exit
+        all_reduce = ((lambda r: lax.pmax(r, tuple(vary_axes)))
+                      if vary_axes else None)
+        x, _ = adaptive_loop(
+            lambda x: step((x, None), None)[0],
+            lambda w, wp: marginal_residual(w, wp, live),
+            x, n_iter, tol, check_every, all_reduce=all_reduce)
     u = 1.0 / x
     t = jnp.einsum("knl,kn->nl", g, u)
     w = jnp.where(live, val / t, 0.0)

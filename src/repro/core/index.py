@@ -43,10 +43,35 @@ batches the query side:
     exhaustive one exactly; ``prune=None`` reproduces exhaustive
     ``query_batch`` + argsort bit-for-bit.
 
+``WmdEngine`` solve policy (ISSUE 4)
+    The solve stage is convergence-adaptive and precision-polymorphic:
+    ``tol`` switches the fixed-length Sinkhorn scan to a
+    ``lax.while_loop`` that exits once every live doc's marginal residual
+    drops below it (``n_iter`` becomes a cap; realized counts are reported
+    via :meth:`WmdEngine.iter_stats`), and ``precision`` selects bf16
+    GEMMs and/or the log-domain kernel
+    (:class:`~repro.core.sinkhorn_sparse.SolvePrecision`) — the log path
+    makes :class:`LamUnderflowError` structurally impossible, so the
+    paper's ``lam=9`` runs on corpora whose distance scale underflows
+    fp32 ``exp(-lam*M)``.
+
+Cluster-major layout (ISSUE 4)
+    ``build_index`` stores the corpus sorted by IVF cluster id: cluster
+    ``c``'s documents occupy the contiguous STORAGE rows
+    ``starts[c]:starts[c+1]``, so ``subset()`` gathers of cascade
+    survivors (which arrive as concatenated cluster slices) copy
+    near-contiguous host rows instead of scattering across the corpus.
+    Storage ids are internal; ``ext_ids``/``remap`` translate to/from the
+    caller's original doc order at the output boundary only, so
+    ``query_batch`` rows and ``search`` indices are unchanged.
+    ``append_docs`` keeps the invariant within the grown group.
+
 Typical use::
 
     index = build_index(corpus.docs, corpus.vecs)
-    engine = WmdEngine(index, lam=9.0, n_iter=15, impl="sparse")
+    engine = WmdEngine(index, lam=9.0, n_iter=15, impl="sparse",
+                       precision="log")   # lam=9 underflows exp(-lam*M)
+    # at this corpus' distance scale; the log-domain policy cannot
     dists = engine.query_batch(queries)            # (Q, N) exhaustive
     res = engine.search(queries, k=10)             # pruned top-k
     index2 = append_docs(index, more_docs)         # streaming, no rebuild
@@ -62,7 +87,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from .sinkhorn import LamUnderflowError, underflow_report
-from .sinkhorn_sparse import reconstruct_gm
+from .sinkhorn_sparse import (SolvePrecision, adaptive_loop,
+                              marginal_residual)
 from .sparse import PaddedDocs
 
 ENGINE_IMPLS = ("sparse", "kernel")
@@ -222,8 +248,69 @@ def default_n_clusters(n_docs: int) -> int:
     return max(1, min(n_docs, int(round(float(np.sqrt(max(n_docs, 1)))))))
 
 
+def auto_n_clusters(centroids: np.ndarray, seed: int = 0,
+                    sample: int = 2048, sweep_iters: int = 4,
+                    drop: float = 0.7) -> int:
+    """Data-tuned cluster count from cluster-radius statistics.
+
+    The sqrt(N) default is wrong for dedup-style corpora (fig9's wants
+    ~N/16): once the cluster count reaches the near-duplicate group
+    count, the mass-weighted mean cluster radius COLLAPSES (each cluster
+    becomes one tight group; measured per-doubling ratio ~0.5 on the fig8
+    corpus), which is exactly what makes the triangle-bound prune bite.
+    A diffuse corpus has no such elbow — its radius declines gently
+    (~0.85-0.95 per doubling) and extra clusters buy nothing.
+
+    So: sweep cluster counts by doubling over a ``sample``-capped subset
+    of the doc centroids (cheap mini-batch Lloyd each), and return the
+    LARGEST candidate whose doubling shrank the weighted mean radius by
+    more than ``1 - drop`` (the structure-driven collapse), scaled back
+    to the full corpus size; with no collapse below ``m // 8``, fall
+    back to the sqrt default. Spelled ``n_clusters="auto"`` in
+    :func:`build_index`, serve, and ``examples/wmd_search.py``.
+    """
+    n = centroids.shape[0]
+    if n <= 4:
+        return max(1, n)
+    rng = np.random.default_rng(seed)
+    pts = centroids
+    if n > sample:
+        pick = np.sort(rng.choice(n, size=sample, replace=False))
+        pts = centroids[pick]
+    m = pts.shape[0]
+    pts_dev = jnp.asarray(pts)
+    best = None
+    prev = None
+    c = 2
+    while c <= max(4, m // 8):
+        centers, assign = _kmeans(pts_dev, c, n_iters=sweep_iters,
+                                  seed=seed)
+        radii = _cluster_radii(pts_dev, centers, assign, c)
+        sizes = np.bincount(assign, minlength=c)
+        wmean = float((sizes * radii).sum() / max(m, 1))
+        if prev is not None and wmean < drop * prev:
+            best = c
+        prev = wmean
+        c *= 2
+    if best is None:
+        # no collapse: the sqrt default, computed on the FULL corpus (a
+        # sample-level sqrt scaled by n/m would be ~n/sqrt(sample))
+        return default_n_clusters(n)
+    # a collapse point is a density statement about the sample — scale it
+    return max(1, min(n, int(round(best * n / m))))
+
+
 class CorpusIndex(NamedTuple):
-    """Query-independent corpus state, frozen once and reused forever."""
+    """Query-independent corpus state, frozen once and reused forever.
+
+    Documents live in CLUSTER-MAJOR storage order (sorted by IVF cluster
+    id at build): all per-doc arrays — ``docs``, ``docs_host``,
+    ``centroids``, group ``cols``, ``clusters.assign`` — are indexed by
+    STORAGE id, and cluster ``c``'s members are the contiguous storage
+    rows ``clusters.starts[c]:starts[c+1]`` at build time. ``ext_ids``
+    maps storage -> the caller's original doc id (``remap`` is the
+    inverse); the engine translates at its output boundary, so results
+    are always in the caller's order."""
 
     docs: PaddedDocs     # full ELL corpus: idx (N, L) int32, val (N, L)
     groups: tuple        # tuple[DocGroup, ...] — nnz-sorted, width-trimmed
@@ -234,6 +321,8 @@ class CorpusIndex(NamedTuple):
     #                        row slices host-side without a full D2H copy
     clusters: IvfClusters = None  # IVF coarse quantizer over the centroids
     #                               (the CascadePruner's shortlist stage)
+    ext_ids: np.ndarray = None   # (N,) host: storage id -> original doc id
+    remap: np.ndarray = None     # (N,) host: original doc id -> storage id
 
     @property
     def n_docs(self) -> int:
@@ -247,7 +336,14 @@ class CorpusIndex(NamedTuple):
     def embed_dim(self) -> int:
         return self.vecs.shape[1]
 
-    def subset(self, doc_ids) -> DocGroup:
+    def to_external(self, storage_ids: np.ndarray) -> np.ndarray:
+        """Storage ids -> the caller's original doc ids."""
+        storage_ids = np.asarray(storage_ids, np.int32)
+        if self.ext_ids is None:
+            return storage_ids
+        return self.ext_ids[storage_ids]
+
+    def subset(self, doc_ids, storage: bool = False) -> DocGroup:
         """Candidate-subset slice for the solve stage: gather ``doc_ids``
         out of the full ELL corpus into one width-trimmed :class:`DocGroup`
         (slots are front-compacted at build, so trimming to the subset's
@@ -256,6 +352,13 @@ class CorpusIndex(NamedTuple):
         staged like queries: O(|doc_ids| * L) work, one small H2D upload,
         no device round-trip.
 
+        ``doc_ids`` are original (caller-order) ids by default;
+        ``storage=True`` takes storage ids directly — the engine's internal
+        path, where cascade survivors arrive as concatenated cluster
+        slices and the cluster-major layout makes this gather a
+        near-contiguous host copy. ``cols`` echoes ``doc_ids`` as passed
+        (so it is in the same id space the caller used).
+
         Shapes are BUCKETED like the query side (doc count padded to a
         power of two with inert all-zero docs, ELL width to a multiple of
         8): candidate counts are data-dependent per search step and would
@@ -263,8 +366,11 @@ class CorpusIndex(NamedTuple):
         traffic. ``cols`` keeps only the real ids — consumers slice the
         solve output to ``cols.shape[0]`` columns."""
         doc_ids = np.asarray(doc_ids, np.int32)
-        idx = self.docs_host.idx[doc_ids]
-        val = self.docs_host.val[doc_ids]
+        rows = doc_ids
+        if not storage and self.remap is not None:
+            rows = self.remap[doc_ids]
+        idx = self.docs_host.idx[rows]
+        val = self.docs_host.val[rows]
         lg = max(1, int((val > 0).sum(axis=1).max(initial=0)))
         lg = min(-(-lg // 8) * 8, idx.shape[1])
         n_pad = 8
@@ -301,45 +407,77 @@ def _doc_centroids(idx_np, val_np, vecs_np, chunk: int = 2048):
 
 
 def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
-                doc_groups: int = 4, n_clusters: int | None = None,
+                doc_groups: int = 4, n_clusters=None,
                 ivf_iters: int = 10, ivf_seed: int = 0) -> CorpusIndex:
     """Freeze the corpus side: device-resident docs + embeddings + norms +
     per-doc centroids (the WCD prune stage's corpus half) + the IVF coarse
     quantizer over those centroids (the cascade's shortlist stage).
 
+    Storage is CLUSTER-MAJOR (ISSUE 4): after clustering, documents are
+    permuted so cluster ids are non-decreasing — cascade survivor gathers
+    in :meth:`CorpusIndex.subset` become near-contiguous host slices
+    instead of corpus-wide scatters. ``ext_ids``/``remap`` record the
+    permutation; every engine result stays in the caller's doc order.
+
+    ``n_clusters`` accepts an int, ``None`` (sqrt(N) default), ``"auto"``
+    (the radius sweep), or a numeric string (CLI passthrough).
+
     Documents are additionally sorted by nnz and split into ``doc_groups``
-    equal-count groups, each trimmed to its own max word count — the
-    per-query solve work drops by the corpus' ELL padding fraction, paid
-    once here instead of on every query. ``n_clusters`` defaults to the
-    sqrt(N) IVF heuristic; clustering runs mini-batch Lloyd on device and
-    is frozen afterwards (:func:`append_docs` only assigns).
+    equal-count groups, each trimmed to its own max word count (members
+    kept in cluster-major order within the group) — the per-query solve
+    work drops by the corpus' ELL padding fraction, paid once here instead
+    of on every query. ``n_clusters`` defaults to the sqrt(N) IVF
+    heuristic; ``"auto"`` sweeps :func:`auto_n_clusters`'s radius
+    statistic instead (dedup-style corpora want far more than sqrt(N)).
+    Clustering runs mini-batch Lloyd on device and is frozen afterwards
+    (:func:`append_docs` only assigns).
     """
     vecs = jnp.asarray(vecs, dtype)
     vecs_np = np.asarray(vecs)
     idx_np, val_np = _compact_slots(docs, dtype)
+    n_docs = idx_np.shape[0]
+    centroids_np = _doc_centroids(idx_np, val_np, vecs_np)
+    if isinstance(n_clusters, str):
+        if n_clusters == "auto":
+            n_clusters = auto_n_clusters(centroids_np, seed=ivf_seed)
+        elif n_clusters.isdigit():
+            n_clusters = int(n_clusters)    # CLI passthrough
+        else:
+            raise ValueError(f"n_clusters must be an int, None, or 'auto', "
+                             f"got {n_clusters!r}")
+    elif n_clusters is None:
+        n_clusters = default_n_clusters(n_docs)
+    n_clusters = max(1, min(int(n_clusters), max(n_docs, 1)))
+    if n_docs:
+        centers, assign = _kmeans(jnp.asarray(centroids_np), n_clusters,
+                                  n_iters=ivf_iters, seed=ivf_seed)
+    else:
+        centers = jnp.zeros((n_clusters, vecs.shape[1]), dtype)
+        assign = np.zeros((0,), np.int32)
+
+    # cluster-major storage: permute every per-doc array so assign is
+    # non-decreasing; ext_ids/remap translate at the output boundary
+    perm = np.argsort(assign, kind="stable").astype(np.int32)
+    idx_np, val_np = idx_np[perm], val_np[perm]
+    centroids_np, assign = centroids_np[perm], assign[perm]
+    ext_ids = perm
+    remap = np.empty_like(perm)
+    remap[perm] = np.arange(perm.size, dtype=np.int32)
+
     nnz = (val_np > 0).sum(1)
     order = np.argsort(nnz, kind="stable")
     n = max(1, len(order))
     gsz = -(-n // max(1, doc_groups))
     groups = []
     for lo in range(0, len(order), gsz):
-        sel = order[lo:lo + gsz]
+        # ascending storage ids within the group == cluster-major
+        sel = np.sort(order[lo:lo + gsz])
         lg = max(1, int(nnz[sel].max(initial=0)))
         groups.append(DocGroup(
             docs=PaddedDocs(idx=jnp.asarray(idx_np[sel][:, :lg]),
                             val=jnp.asarray(val_np[sel][:, :lg])),
             cols=jnp.asarray(sel.astype(np.int32))))
-    centroids = jnp.asarray(_doc_centroids(idx_np, val_np, vecs_np))
-    n_docs = idx_np.shape[0]
-    if n_clusters is None:
-        n_clusters = default_n_clusters(n_docs)
-    n_clusters = max(1, min(int(n_clusters), max(n_docs, 1)))
-    if n_docs:
-        centers, assign = _kmeans(centroids, n_clusters, n_iters=ivf_iters,
-                                  seed=ivf_seed)
-    else:
-        centers = jnp.zeros((n_clusters, vecs.shape[1]), dtype)
-        assign = np.zeros((0,), np.int32)
+    centroids = jnp.asarray(centroids_np)
     c_order, c_starts = _membership(assign, n_clusters)
     radii = _cluster_radii(centroids, centers, assign, n_clusters)
     return CorpusIndex(docs=PaddedDocs(idx=jnp.asarray(idx_np),
@@ -351,7 +489,8 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
                        clusters=IvfClusters(centers=centers, assign=assign,
                                             order=c_order, starts=c_starts,
                                             radii=radii,
-                                            assign_dev=jnp.asarray(assign)))
+                                            assign_dev=jnp.asarray(assign)),
+                       ext_ids=ext_ids, remap=remap)
 
 
 def _pad_width(a, width: int):
@@ -381,6 +520,12 @@ def append_docs(index: CorpusIndex, new_docs: PaddedDocs,
     (``nprobe = n_clusters``) is unaffected; smaller-``nprobe`` recall
     degrades only as far as the frozen centers drift from the grown
     corpus — rebuild when that matters.
+
+    Cluster-major invariant: appended docs take the NEXT storage ids (the
+    global storage is no longer one contiguous run per cluster — member
+    slices go through ``clusters.order`` and stay *near*-contiguous), but
+    the grown group's rows are re-sorted by cluster id so its arrays keep
+    the build-time layout; a rebuild restores full contiguity.
     """
     n_new = new_docs.idx.shape[0]
     if n_new == 0:
@@ -409,24 +554,9 @@ def append_docs(index: CorpusIndex, new_docs: PaddedDocs,
         val=np.concatenate([_pad_width(index.docs_host.val, width),
                             _pad_width(new_val, width)]))
 
-    # grow only the smallest group; all others are reused untouched
-    gi = int(np.argmin([g.cols.shape[0] for g in index.groups]))
-    grp = index.groups[gi]
-    gw = max(grp.docs.idx.shape[1], lg_new)
-    grown = DocGroup(
-        docs=PaddedDocs(
-            idx=jnp.concatenate([_pad_width(grp.docs.idx, gw),
-                                 jnp.asarray(_pad_width(new_idx, gw))]),
-            val=jnp.concatenate([_pad_width(grp.docs.val, gw),
-                                 jnp.asarray(_pad_width(new_val, gw))])),
-        cols=jnp.concatenate([grp.cols,
-                              jnp.arange(n_old, n_old + n_new,
-                                         dtype=jnp.int32)]))
-    groups = tuple(grown if i == gi else g
-                   for i, g in enumerate(index.groups))
-
     cent_new = _doc_centroids(new_idx, new_val, np.asarray(index.vecs))
     clusters = index.clusters
+    assign = None
     if clusters is not None:
         cent_new_dev = jnp.asarray(cent_new)
         assign_new = np.asarray(
@@ -442,11 +572,42 @@ def append_docs(index: CorpusIndex, new_docs: PaddedDocs,
         clusters = clusters._replace(assign=assign, order=c_order,
                                      starts=c_starts, radii=radii,
                                      assign_dev=jnp.asarray(assign))
+
+    # grow only the smallest group; all others are reused untouched
+    gi = int(np.argmin([g.cols.shape[0] for g in index.groups]))
+    grp = index.groups[gi]
+    gw = max(grp.docs.idx.shape[1], lg_new)
+    g_idx = jnp.concatenate([_pad_width(grp.docs.idx, gw),
+                             jnp.asarray(_pad_width(new_idx, gw))])
+    g_val = jnp.concatenate([_pad_width(grp.docs.val, gw),
+                             jnp.asarray(_pad_width(new_val, gw))])
+    g_cols = np.concatenate([np.asarray(grp.cols),
+                             np.arange(n_old, n_old + n_new, dtype=np.int32)])
+    if assign is not None:
+        # keep the grown group cluster-major (ISSUE 4 invariant): one
+        # O(group) device gather per append, amortized over every
+        # subsequent query
+        gorder = np.argsort(assign[g_cols], kind="stable").astype(np.int32)
+        if not np.array_equal(gorder, np.arange(gorder.size)):
+            gd = jnp.asarray(gorder)
+            g_idx = jnp.take(g_idx, gd, axis=0)
+            g_val = jnp.take(g_val, gd, axis=0)
+            g_cols = g_cols[gorder]
+    grown = DocGroup(docs=PaddedDocs(idx=g_idx, val=g_val),
+                     cols=jnp.asarray(g_cols))
+    groups = tuple(grown if i == gi else g
+                   for i, g in enumerate(index.groups))
+
+    tail_ids = np.arange(n_old, n_old + n_new, dtype=np.int32)
+    ext_ids = (np.concatenate([index.ext_ids, tail_ids])
+               if index.ext_ids is not None else None)
+    remap = (np.concatenate([index.remap, tail_ids])
+             if index.remap is not None else None)
     return index._replace(
         docs=docs, groups=groups, docs_host=docs_host,
         centroids=jnp.concatenate([index.centroids,
                                    jnp.asarray(cent_new)]),
-        clusters=clusters)
+        clusters=clusters, ext_ids=ext_ids, remap=remap)
 
 
 def bucket_size(v_r: int, min_bucket: int = 8) -> int:
@@ -461,7 +622,22 @@ def _safe_inv(x):
     return jnp.where(x > 0, 1.0 / jnp.where(x > 0, x, 1.0), 0.0)
 
 
-def _solve_batched_einsum(g, val, r, mask, lam, n_iter):
+def _stabilize_log_g(g):
+    """Column-stabilize a gathered LOG-kernel tile (Q, N, L, B): subtract
+    each (q, n, l) column's max over the query-word axis and exponentiate.
+    Masked/padded rows carry -inf and exponentiate to exactly 0; a column
+    with no live row (an all-pad filler query) gets shift 0 and stays
+    all-zero. Returns (G', shift) with every live column's max entry == 1,
+    so an all-zero K column — the LamUnderflowError mode — cannot occur."""
+    shift = jnp.max(g, axis=-1)                         # (Q, N, L)
+    shift = jnp.where(jnp.isfinite(shift), shift, 0.0)
+    gp = jnp.where(jnp.isfinite(g), jnp.exp(g - shift[..., None]), 0.0)
+    return gp, shift
+
+
+def _solve_batched_einsum(g, mq, idx, val, r, mask, lam, n_iter, tol=None,
+                          check_every: int = 4, gemm: str = "fp32",
+                          log_domain: bool = False):
     """Batched ELL Sinkhorn + distance line in the CPU/XLA-friendly layout.
 
     g (Q, N, L, B): query rows on the MINOR axis, so both contractions are
@@ -470,35 +646,109 @@ def _solve_batched_einsum(g, val, r, mask, lam, n_iter):
     G tensor is kept: diag(1/r) is folded into the x-update (r is constant
     per row) instead of materializing G_over_r, halving resident bytes.
     val (N, L); r, mask (Q, B); padded rows (G == 0, r == 1) are inert.
-    Returns wmd (Q, N).
+
+    ``tol`` switches the fixed-length scan to a ``lax.while_loop`` that
+    checks the doc-marginal residual ``max|val/t - w_prev|`` every
+    ``check_every`` iterations — measured RELATIVE to each doc's own
+    marginal scale, and masked to live queries x live slots so padded
+    docs/queries can neither stall the loop nor release it early.
+    ``n_iter`` becomes a cap (realized counts land on
+    ``1 + k*check_every``; the residual window is seeded with one real
+    iteration so even the first check can exit). ``gemm="bf16"`` runs both contractions with bf16
+    inputs and fp32 accumulation; ``log_domain=True`` takes ``g`` as
+    UNexponentiated ``log K`` (masked rows -inf) and stabilizes it per
+    column before the loop.
+
+    Distance-line epilogue (ISSUE 4): instead of reconstructing
+    ``GM = -G*log(G)/lam`` (a transcendental over the whole nnz tensor —
+    measured ~6 iterations' worth on CPU, and wrong for the stabilized
+    log-domain G anyway), the TRUE transport costs are gathered from the
+    chunk's (Q, V, B) cdist output ``mq`` — one gather + multiply, exact
+    in both domains, and the reason the log path needs NO shift
+    correction here. The vocab-level M is held for the chunk (same size
+    as ``kq``); the nnz-level (Q, N, L, B) product exists only inside
+    this jit. The Pallas kernel path keeps the in-VMEM ``reconstruct_gm``
+    (on TPU recompute beats the extra HBM gather).
+
+    Returns (wmd (Q, N), realized iterations (int32 scalar)).
     """
     q, n, length, b = g.shape
     live = val > 0                                      # (N, L)
+    if log_domain:
+        g, _ = _stabilize_log_g(g)
+    gd = jnp.bfloat16 if gemm == "bf16" else None
+    gb = g if gd is None else g.astype(gd)
+
+    def _sddmm(u):
+        if gd is None:
+            return jnp.einsum("qnlb,qnb->qnl", gb, u)
+        return jnp.einsum("qnlb,qnb->qnl", gb, u.astype(gd),
+                          preferred_element_type=jnp.float32)
+
+    def _spmm(w):
+        if gd is None:
+            return jnp.einsum("qnlb,qnl->qnb", gb, w)
+        return jnp.einsum("qnlb,qnl->qnb", gb, w.astype(gd),
+                          preferred_element_type=jnp.float32)
+
     rinv = _safe_inv(r)[:, None, :]                     # (Q, 1, B)
     denom = jnp.sum(mask, axis=1, keepdims=True)
     x0 = jnp.where(mask > 0, 1.0 / jnp.maximum(denom, 1.0), 0.0)
-    x = jnp.broadcast_to(x0[:, None, :], (q, n, b))
+    x = jnp.broadcast_to(x0[:, None, :], (q, n, b)).astype(jnp.float32)
+
+    def _select_w(t):
+        # linear path: raw val/t so a K-column underflow surfaces as NaN
+        # for the engine's LamUnderflowError guard. log path: t == 0 can
+        # only mean a fully-underflowed query-word ROW at extreme lam —
+        # guard it so the word drops out instead of poisoning the doc.
+        if not log_domain:
+            return jnp.where(live[None], val[None] / t, 0.0)
+        ok = live[None] & (t > 0)
+        return jnp.where(ok, val[None] / jnp.where(ok, t, 1.0), 0.0)
 
     # pad rows keep x == 0 exactly (their G is 0), so a single x > 0 guard
     # on u suffices — the untaken 1/0 branch yields inf which the select
     # discards; live-entry arithmetic matches the per-query oracle's.
-    def body(x, _):
+    def step(carry, _):
+        x, _ = carry
         u = jnp.where(x > 0, 1.0 / x, 0.0)
-        t = jnp.einsum("qnlb,qnb->qnl", g, u)           # SDDMM
-        w = jnp.where(live[None], val[None] / t, 0.0)
-        x = jnp.einsum("qnlb,qnl->qnb", g, w) * rinv    # SpMM (fused)
-        return x, None
+        t = _sddmm(u)                                   # SDDMM
+        w = _select_w(t)
+        x = _spmm(w) * rinv                             # SpMM (fused)
+        return (x, w), None
 
-    x, _ = lax.scan(body, x, None, length=n_iter)
+    if tol is None:
+        # x-only carry: bit-identical to the pre-adaptive dispatch (the
+        # step's w is only needed by the residual check)
+        x, _ = lax.scan(lambda x, _: (step((x, None), None)[0][0], None),
+                        x, None, length=n_iter)
+        iters = jnp.asarray(n_iter, jnp.int32)
+    else:
+        # residual mask: live queries (any support) x live doc slots —
+        # filler queries' w is inf/NaN and padded docs' is 0; both are
+        # excluded so they can neither hold the loop open nor close it
+        resmask = ((jnp.sum(mask, axis=1) > 0)[:, None, None]
+                   & live[None])                        # (Q, N, L)
+        x, iters = adaptive_loop(
+            lambda x: step((x, None), None)[0],
+            lambda w, wp: marginal_residual(w, wp, resmask),
+            x, n_iter, tol, check_every)
+
     u = jnp.where(x > 0, 1.0 / x, 0.0)
-    t = jnp.einsum("qnlb,qnb->qnl", g, u)
-    w = jnp.where(live[None], val[None] / t, 0.0)
-    return jnp.einsum("qnb,qnlb,qnl->qn", u, reconstruct_gm(g, lam), w)
+    t = _sddmm(u)
+    w = _select_w(t)
+    mg = jnp.take(mq, idx, axis=1)                      # (Q, N, L, B)
+    gm = jnp.where(g > 0, g * mg, 0.0)
+    # wmd[q,n] = sum_b u sum_l GM w — with the TRUE gathered M, exact for
+    # the stabilized log-domain G too (G' M w' == G M w identically)
+    return jnp.einsum("qnb,qnlb,qnl->qn", u, gm, w), iters
 
 
-@functools.partial(jax.jit, static_argnames=("lam",))
+@functools.partial(jax.jit, static_argnames=("lam", "gemm", "log_domain",
+                                             "with_m"))
 def _compute_kq(sup: jax.Array, mask: jax.Array, vecs: jax.Array,
-                vecs_sq: jax.Array, lam: float) -> jax.Array:
+                vecs_sq: jax.Array, lam: float, gemm: str = "fp32",
+                log_domain: bool = False, with_m: bool = True):
     """Stacked cdist GEMM -> K for one query chunk: (Q, B) ids -> (Q, V, B).
 
     One (V, Q*B) GEMM replaces Q separate (v_r, V) cdists. The TRANSPOSED
@@ -506,14 +756,40 @@ def _compute_kq(sup: jax.Array, mask: jax.Array, vecs: jax.Array,
     instead of striding over the vocab axis; the reorder to (Q, V, B)
     happens on this SMALL matrix, never on the Q*N*L*B gather output.
     Padded rows (mask == 0) come out as all-zero K columns (G == 0).
+
+    Returns (kq (Q, V, B), mq (Q, V, B)): the kernel AND the raw cdist —
+    the solve's distance-line epilogue gathers its transport costs from
+    ``mq`` instead of reconstructing them via ``log(G)`` (see
+    :func:`_solve_batched_einsum`). ``mq`` is unmasked (the epilogue's
+    ``g > 0`` guard excludes pad rows). ``with_m=False`` returns ``kq``
+    alone — the Pallas path reconstructs GM in VMEM and must not pay an
+    unused (Q, V, B) buffer per staged chunk.
+
+    ``gemm="bf16"`` casts only the GEMM operands (fp32 accumulation via
+    ``preferred_element_type``); ``log_domain=True`` returns
+    UNexponentiated ``log K = -lam*M`` with masked rows at -inf — the
+    solve stabilizes per gathered column (:func:`_stabilize_log_g`), so
+    no K column can underflow at any lam.
     """
     q, b = sup.shape
     a = jnp.take(vecs, sup, axis=0)                     # (Q, B, w)
     a2 = jnp.sum(a * a, axis=-1)                        # (Q, B)
-    ab = vecs @ a.reshape(q * b, -1).T                  # (V, Q*B)
+    if gemm == "bf16":
+        ab = jnp.matmul(vecs.astype(jnp.bfloat16),
+                        a.reshape(q * b, -1).T.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    else:
+        ab = vecs @ a.reshape(q * b, -1).T              # (V, Q*B)
     d2 = jnp.maximum(vecs_sq[:, None] + a2.reshape(1, -1) - 2.0 * ab, 0.0)
-    kt = jnp.exp(-lam * jnp.sqrt(d2)) * mask.reshape(1, -1)
-    return jnp.transpose(kt.reshape(-1, q, b), (1, 0, 2))    # (Q, V, B)
+    m = jnp.sqrt(d2)
+    if log_domain:
+        kt = jnp.where(mask.reshape(1, -1) > 0, -lam * m, -jnp.inf)
+    else:
+        kt = jnp.exp(-lam * m) * mask.reshape(1, -1)
+    kq = jnp.transpose(kt.reshape(-1, q, b), (1, 0, 2))       # (Q, V, B)
+    if not with_m:
+        return kq
+    return kq, jnp.transpose(m.reshape(-1, q, b), (1, 0, 2))
 
 
 @functools.partial(jax.jit, static_argnames=("layout",))
@@ -532,7 +808,9 @@ def _gather_g(kq: jax.Array, idx: jax.Array, layout: str = "qnlb"):
 
 
 _solve_gathered = jax.jit(_solve_batched_einsum,
-                          static_argnames=("lam", "n_iter"))
+                          static_argnames=("lam", "n_iter", "tol",
+                                           "check_every", "gemm",
+                                           "log_domain"))
 
 
 def _prepare_query(q, bucket: int, dtype):
@@ -584,6 +862,20 @@ class WmdEngine:
                  both fp32, so a candidate is kept unless its bound exceeds
                  the threshold by more than this fraction. Costs a few extra
                  survivors; guards the exact-top-k contract against rounding.
+    tol:         convergence-adaptive solve (ISSUE 4): exit the Sinkhorn
+                 loop once every live doc's marginal residual
+                 ``max|val/t - w_prev|`` (relative to the doc's own
+                 marginal scale) is below ``tol``, checked every
+                 ``check_every`` iterations. ``None`` (default) keeps the
+                 fixed-length loop bit-for-bit; with ``tol`` set,
+                 ``n_iter`` becomes a cap (realized counts land on
+                 ``1 + k*check_every``). Realized counts:
+                 :meth:`iter_stats`.
+    precision:   :class:`~repro.core.sinkhorn_sparse.SolvePrecision` or
+                 its spelling (``"fp32"``, ``"bf16"``, ``"log"``,
+                 ``"bf16+log"``) — bf16 GEMMs with fp32 accumulation
+                 (tolerance-bounded) and/or the log-domain kernel (exact;
+                 makes :class:`LamUnderflowError` impossible at any lam).
     """
 
     def __init__(self, index: CorpusIndex, lam: float = 10.0,
@@ -591,7 +883,8 @@ class WmdEngine:
                  min_bucket: int = 8, max_batch: int = 4,
                  pad_q: bool = True, block_n: int = 128,
                  interpret: bool | None = None, dtype=jnp.float32,
-                 prune_slack: float = 1e-3):
+                 prune_slack: float = 1e-3, tol: float | None = None,
+                 check_every: int = 4, precision=None):
         if impl not in ENGINE_IMPLS:
             raise ValueError(f"impl must be one of {ENGINE_IMPLS}, "
                              f"got {impl!r}")
@@ -606,6 +899,33 @@ class WmdEngine:
         self.interpret = interpret
         self.dtype = np.dtype(jnp.dtype(dtype).name)
         self.prune_slack = float(prune_slack)
+        self.tol = None if tol is None else float(tol)
+        self.check_every = int(check_every)
+        self.precision = SolvePrecision.parse(precision)
+        # bounded ring: a long-running service must not leak one device
+        # scalar per solve dispatch forever (reset_iter_stats() clears)
+        import collections
+        self._iters_pending: collections.deque = collections.deque(
+            maxlen=4096)
+
+    # -------------------------------------------------- realized iterations
+    def reset_iter_stats(self) -> None:
+        """Drop the accumulated realized-iteration log."""
+        self._iters_pending.clear()
+
+    def iter_stats(self) -> np.ndarray:
+        """Realized Sinkhorn iteration counts, one per solve dispatch since
+        the last :meth:`reset_iter_stats` (device scalars are synced here,
+        not on the hot path; the log keeps the most recent 4096 solves).
+        With ``tol=None`` every entry equals ``n_iter``; with the adaptive
+        loop this is the early-exit histogram the fig10 benchmark
+        reports."""
+        return np.asarray([int(i) for i in self._iters_pending],
+                          dtype=np.int64)
+
+    def _ext(self, storage_ids) -> np.ndarray:
+        """Storage ids -> caller-order doc ids (the output boundary)."""
+        return self.index.to_external(np.asarray(storage_ids))
 
     def query(self, r_full) -> jax.Array:
         """WMD from one full-vocab query histogram to every doc: (N,)."""
@@ -661,20 +981,44 @@ class WmdEngine:
         """Solve one prepared chunk against one doc group (device array,
         not yet synced): gather the group's K columns, run the batched
         solver. Works for index groups and pruned candidate subsets alike —
-        the solve stage of the pipeline."""
+        the solve stage of the pipeline. ``kq`` is the (kq, mq) pair from
+        :meth:`_kq`. Realized iteration counts land in :meth:`iter_stats`
+        (device scalars, synced lazily)."""
+        kqk, mq = kq
         layout = "qbnl" if self.impl == "kernel" else "qnlb"
-        g = _gather_g(kq, grp.docs.idx, layout=layout)
+        g = _gather_g(kqk, grp.docs.idx, layout=layout)
         if self.impl == "kernel":
             from repro.kernels.ops import sinkhorn_fused_all_batched
-            return sinkhorn_fused_all_batched(
+            wmd, iters = sinkhorn_fused_all_batched(
                 g, grp.docs.val, r, self.lam, self.n_iter,
-                block_n=self.block_n, interpret=self.interpret)
-        return _solve_gathered(g, grp.docs.val, r, mask, self.lam,
-                               self.n_iter)
+                block_n=self.block_n, interpret=self.interpret,
+                tol=self.tol, check_every=self.check_every,
+                gemm=self.precision.gemm,
+                log_domain=self.precision.log_domain, with_iters=True)
+            self._iters_pending.append(jnp.max(iters))
+            return wmd
+        wmd, iters = _solve_gathered(g, mq, grp.docs.idx, grp.docs.val, r,
+                                     mask, self.lam, self.n_iter, self.tol,
+                                     self.check_every, self.precision.gemm,
+                                     self.precision.log_domain)
+        self._iters_pending.append(iters)
+        return wmd
 
     def _kq(self, sup, mask):
+        """(kq, mq) for one staged chunk — treat as an opaque pair; the
+        solve stage consumes both (kernel gather + distance epilogue).
+        The kernel impl reconstructs GM in VMEM, so its pair carries
+        ``mq=None`` instead of an unused (Q, V, B) buffer."""
+        if self.impl == "kernel":
+            kq = _compute_kq(sup, mask, self.index.vecs,
+                             self.index.vecs_sq, self.lam,
+                             gemm=self.precision.gemm,
+                             log_domain=self.precision.log_domain,
+                             with_m=False)
+            return kq, None
         return _compute_kq(sup, mask, self.index.vecs, self.index.vecs_sq,
-                           self.lam)
+                           self.lam, gemm=self.precision.gemm,
+                           log_domain=self.precision.log_domain)
 
     def _raise_if_nan(self, wmd_np: np.ndarray, chunk_queries: list) -> None:
         """Every chunk query has support, so NaN here means the lam-driven
@@ -718,7 +1062,9 @@ class WmdEngine:
             for grp, wmd_g in parts:
                 w = np.asarray(wmd_g)[:len(chunk)]
                 self._raise_if_nan(w, [queries[qi] for qi in chunk])
-                out[np.ix_(chunk, np.asarray(grp.cols))] = w
+                # group cols are STORAGE ids (cluster-major); scatter into
+                # the caller's doc order at this output boundary
+                out[np.ix_(chunk, self._ext(grp.cols))] = w
         return jnp.asarray(out)
 
     # ------------------------------------------------------------ search
@@ -801,16 +1147,17 @@ class WmdEngine:
 
             def solve(doc_ids):     # -> (qc, |ids|) np, NaN-checked
                 w = np.asarray(self._solve_group(
-                    kq, r, mask, self.index.subset(doc_ids)))
+                    kq, r, mask, self.index.subset(doc_ids, storage=True)))
                 w = w[:qc, :doc_ids.size]  # drop q/doc shape padding
                 self._raise_if_nan(w, cq)
                 return w
 
             cand, d_cand = self._prune_full(pruner, sup, r, mask, qc, k,
                                             solve)
+            cand_ext = self._ext(cand)       # storage -> caller doc ids
             for ci, qi in enumerate(chunk):
                 order = np.argsort(d_cand[ci], kind="stable")[:k]
-                out_i[qi, :order.size] = cand[order]
+                out_i[qi, :order.size] = cand_ext[order]
                 out_d[qi, :order.size] = d_cand[ci, order]
                 solved[qi] = cand.size
         return SearchResult(out_i, out_d, solved)
@@ -905,7 +1252,9 @@ class WmdEngine:
 
         def solve_all(doc_ids):       # -> (qg, |ids|) np, NaN-checked
             out = np.empty((qg, doc_ids.size), self.dtype)
-            grp = index.subset(doc_ids)   # one gather, shared by chunks
+            # one gather, shared by chunks; survivor ids are cluster-sorted
+            # storage ids, so this is a near-contiguous host slice
+            grp = index.subset(doc_ids, storage=True)
             for chunk, cq, sup, r, mask, kq in prepped:
                 w = np.asarray(self._solve_group(kq, r, mask, grp))
                 w = w[:len(chunk), :doc_ids.size]
@@ -920,8 +1269,9 @@ class WmdEngine:
         cand = np.concatenate([seed, surv])
         d_cand = (np.concatenate([d_seed, solve_all(surv)], axis=1)
                   if surv.size else d_seed)
+        cand_ext = self._ext(cand)           # storage -> caller doc ids
         for g, qi in enumerate(live_q):
             order = np.argsort(d_cand[g], kind="stable")[:k]
-            out_i[qi, :order.size] = cand[order]
+            out_i[qi, :order.size] = cand_ext[order]
             out_d[qi, :order.size] = d_cand[g, order]
             solved[qi] = cand.size

@@ -409,8 +409,11 @@ class CascadePruner:
         picked = np.nonzero(chosen)[0]
         if picked.size == 0:
             return np.zeros(0, np.int32)
-        return np.sort(np.concatenate(
-            [cl.order[cl.starts[c]:cl.starts[c + 1]] for c in picked]))
+        # cluster-sorted storage ids: with the index's cluster-major layout
+        # (ISSUE 4) this concat of per-cluster slices is a near-contiguous
+        # run of storage rows — exactly what subset()'s gather wants
+        return np.concatenate(
+            [cl.order[cl.starts[c]:cl.starts[c + 1]] for c in picked])
 
     def id_qmask(self, index, pm, ids_pad: np.ndarray, n_real: int,
                  qp: int | None = None) -> jax.Array:
@@ -433,13 +436,14 @@ class CascadePruner:
         return np.asarray(_cluster_keep_fused(cdists, radii, pm, thresh))
 
     def cluster_members(self, index, keep_c: np.ndarray) -> np.ndarray:
-        """Sorted doc ids of the kept clusters (host slice concat)."""
+        """Cluster-sorted doc ids of the kept clusters (host slice concat —
+        a near-contiguous storage run under the cluster-major layout)."""
         cl = index.clusters
         kept = np.nonzero(keep_c[:cl.n_clusters])[0]
         if kept.size == 0:
             return np.zeros(0, np.int32)
-        return np.sort(np.concatenate(
-            [cl.order[cl.starts[c]:cl.starts[c + 1]] for c in kept]))
+        return np.concatenate(
+            [cl.order[cl.starts[c]:cl.starts[c + 1]] for c in kept])
 
     # --------------------------------------- post-threshold survivor pass
     def survivors(self, index, sup, r, mask, cdists, pm, qcent, thresh,

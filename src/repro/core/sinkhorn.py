@@ -70,22 +70,32 @@ def underflow_report(lam: float, vecs_sel, vecs, docs) -> str:
         f"max lam*min-dist here = {lam * float(mincol.max()):.0f}). The "
         f"Sinkhorn division by these columns would make every affected "
         f"distance NaN. Reduce lam (corpus min-distance scale ~{scale:.1f} "
-        f"-> lam <~ {MAX_NEG_EXP / max(scale, 1e-9):.1f}) or use "
-        f"impl='dense_stabilized' (log-domain, large-lam safe)."
+        f"-> lam <~ {MAX_NEG_EXP / max(scale, 1e-9):.1f}), or opt into the "
+        f"log-domain solve — precision='log' on WmdEngine / "
+        f"sinkhorn_wmd_sparse (underflow-free at any lam), or "
+        f"impl='dense_stabilized' for the dense path."
     )
 
 
-def cdist(a: jax.Array, b: jax.Array) -> jax.Array:
+def cdist(a: jax.Array, b: jax.Array, gemm_dtype=None) -> jax.Array:
     """Pairwise Euclidean distance, GEMM-shaped (paper §6).
 
     ``m[i, j] = sqrt(|a_i|^2 + |b_j|^2 - 2 a_i.b_j)`` — one big matmul plus
     rank-1 corrections instead of a broadcast-subtract (which would
     materialize an (v_r, V, w) intermediate). This is the paper's
     "matrix-multiplication-like" Euclidean distance restructuring.
+
+    ``gemm_dtype`` (e.g. ``jnp.bfloat16``) casts ONLY the matmul operands;
+    the accumulation and the rank-1 norms stay fp32 (the
+    :class:`~repro.core.sinkhorn_sparse.SolvePrecision` bf16 policy).
     """
     a2 = jnp.sum(a * a, axis=-1)[:, None]
     b2 = jnp.sum(b * b, axis=-1)[None, :]
-    ab = a @ b.T
+    if gemm_dtype is None:
+        ab = a @ b.T
+    else:
+        ab = jnp.matmul(a.astype(gemm_dtype), b.astype(gemm_dtype).T,
+                        preferred_element_type=jnp.float32)
     d2 = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
     return jnp.sqrt(d2)
 

@@ -24,17 +24,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(a_ref, b_ref, r_ref, *out_refs, lam: float, k_only: bool):
+def _kernel(a_ref, b_ref, r_ref, *out_refs, lam: float, k_only: bool,
+            gemm: str, log_k: bool):
     a = a_ref[...]                       # (v_r, w)   resident
     b = b_ref[...]                       # (bv, w)    streamed tile
     r = r_ref[...]                       # (v_r, 1)
-    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # MXU
+    if gemm == "bf16":                   # bf16 operands, fp32 accumulation
+        ab = jax.lax.dot_general(a.astype(jnp.bfloat16),
+                                 b.astype(jnp.bfloat16),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    else:
+        ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # MXU
     a2 = jnp.sum(a * a, axis=1, keepdims=True)        # (v_r, 1)
     b2 = jnp.sum(b * b, axis=1)[None, :]              # (1, bv)
     d2 = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
     m = jnp.sqrt(d2)
-    k = jnp.exp(-lam * m)
+    # log_k: emit UNexponentiated log K = -lam*M (the log-domain solve
+    # stabilizes per gathered column, so exp never underflows a column)
+    k = -lam * m if log_k else jnp.exp(-lam * m)
     if k_only:
         (k_ref,) = out_refs
         k_ref[...] = k
@@ -46,10 +55,12 @@ def _kernel(a_ref, b_ref, r_ref, *out_refs, lam: float, k_only: bool):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("lam", "block_v", "interpret", "k_only"))
+                   static_argnames=("lam", "block_v", "interpret", "k_only",
+                                    "gemm", "log_k"))
 def cdist_exp(a: jax.Array, b: jax.Array, r: jax.Array, lam: float,
               block_v: int = 512, interpret: bool = False,
-              k_only: bool = False):
+              k_only: bool = False, gemm: str = "fp32",
+              log_k: bool = False):
     """Fused (M, K, K_over_r) for query embeddings ``a`` (v_r, w), vocabulary
     embeddings ``b`` (V, w), query frequencies ``r`` (v_r,).
 
@@ -61,6 +72,10 @@ def cdist_exp(a: jax.Array, b: jax.Array, r: jax.Array, lam: float,
     that reconstruct GM from G (the fused solver path) would otherwise pay
     HBM stores for two dead (v_r, V) buffers — Pallas outputs can't be
     dead-code-eliminated by XLA.
+
+    ``gemm="bf16"`` runs the MXU contraction with bf16 operands and fp32
+    accumulation; ``log_k=True`` (with ``k_only``) emits ``-lam*M``
+    unexponentiated for the log-domain solve.
     """
     v_r, w = a.shape
     v = b.shape[0]
@@ -69,7 +84,8 @@ def cdist_exp(a: jax.Array, b: jax.Array, r: jax.Array, lam: float,
     out_spec = pl.BlockSpec((v_r, block_v), lambda i: (0, i))
     n_out = 1 if k_only else 3
     out = pl.pallas_call(
-        functools.partial(_kernel, lam=lam, k_only=k_only),
+        functools.partial(_kernel, lam=lam, k_only=k_only, gemm=gemm,
+                          log_k=log_k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((v_r, w), lambda i: (0, 0)),      # a resident

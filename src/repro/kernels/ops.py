@@ -34,9 +34,12 @@ def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
 
 
 def cdist_exp(a, b, r, lam: float, block_v: int = 512,
-              interpret: bool | None = None, k_only: bool = False):
+              interpret: bool | None = None, k_only: bool = False,
+              gemm: str = "fp32", log_k: bool = False):
     """Fused (M, K, K_over_r) with auto-padding. a (v_r, w), b (V, w).
-    ``k_only=True`` returns just K and skips the two dead HBM stores."""
+    ``k_only=True`` returns just K and skips the two dead HBM stores;
+    ``gemm``/``log_k`` plumb the SolvePrecision policy (bf16 MXU operands
+    / unexponentiated log K for the log-domain solve)."""
     interpret = INTERPRET if interpret is None else interpret
     v_r, w = a.shape
     v = b.shape[0]
@@ -45,7 +48,8 @@ def cdist_exp(a, b, r, lam: float, block_v: int = 512,
     rp = pad_to(r, 0, 8, value=1.0)          # pad rows divide by 1
     if k_only:
         k = _cdist_exp.cdist_exp(ap, bp, rp, lam, block_v=block_v,
-                                 interpret=interpret, k_only=True)
+                                 interpret=interpret, k_only=True,
+                                 gemm=gemm, log_k=log_k)
         return k[:v_r, :v]
     m, k, kr = _cdist_exp.cdist_exp(ap, bp, rp, lam,
                                     block_v=block_v, interpret=interpret)
@@ -95,42 +99,72 @@ def sddmm_spmm_step(g, g_over_r, val, x, block_n: int = 128,
 
 
 def sinkhorn_fused_all(g, val, r, lam: float, n_iter: int, block_n: int = 128,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None, tol=None,
+                       check_every: int = 4, gemm: str = "fp32",
+                       log_domain: bool = False, with_iters: bool = False):
+    """Fused solver with auto-padding; ``with_iters=True`` also returns the
+    per-block realized iteration counts. ``log_domain`` pads query rows
+    with -inf (a 0 would be a VALID log-K entry — distance 0 — and the
+    pad row would stop being inert)."""
     interpret = INTERPRET if interpret is None else interpret
     v_r, n, length = g.shape
-    gp = pad_to(pad_to(pad_to(g, 2, 128), 1, block_n), 0, 8)
+    row_pad = -jnp.inf if log_domain else 0.0
+    gp = pad_to(pad_to(pad_to(g, 2, 128), 1, block_n), 0, 8, value=row_pad)
     valp = pad_to(pad_to(val, 1, 128), 0, block_n)
     rp = pad_to(r, 0, 8, value=1.0)
-    wmd = _sddmm_spmm.sinkhorn_fused_all(gp, valp, rp, lam, n_iter,
-                                         block_n=block_n, interpret=interpret)
-    return wmd[:n]
+    wmd, iters = _sddmm_spmm.sinkhorn_fused_all(
+        gp, valp, rp, lam, n_iter, block_n=block_n, interpret=interpret,
+        tol=tol, check_every=check_every, gemm=gemm, log_domain=log_domain)
+    return (wmd[:n], iters) if with_iters else wmd[:n]
 
 
 def sinkhorn_fused_all_batched(g, val, r, lam: float, n_iter: int,
                                block_n: int = 128,
-                               interpret: bool | None = None):
+                               interpret: bool | None = None, tol=None,
+                               check_every: int = 4, gemm: str = "fp32",
+                               log_domain: bool = False,
+                               with_iters: bool = False):
     """Batched fused solver with auto-padding. g (Q, v_r, N, L); val (N, L);
-    r (Q, v_r) -> wmd (Q, N). Padded query rows carry r == 1, G == 0."""
+    r (Q, v_r) -> wmd (Q, N). Padded query rows carry r == 1, G == 0
+    (G == -inf under ``log_domain`` — see :func:`sinkhorn_fused_all`).
+    ``with_iters=True`` also returns the (Q, N-blocks) realized iteration
+    counts (per-block early exit under ``tol``)."""
     interpret = INTERPRET if interpret is None else interpret
     q, v_r, n, length = g.shape
-    gp = pad_to(pad_to(pad_to(g, 3, 128), 2, block_n), 1, 8)
+    row_pad = -jnp.inf if log_domain else 0.0
+    gp = pad_to(pad_to(pad_to(g, 3, 128), 2, block_n), 1, 8, value=row_pad)
     valp = pad_to(pad_to(val, 1, 128), 0, block_n)
     rp = pad_to(r, 1, 8, value=1.0)
-    wmd = _sddmm_spmm.sinkhorn_fused_all_batched(
-        gp, valp, rp, lam, n_iter, block_n=block_n, interpret=interpret)
-    return wmd[:, :n]
+    wmd, iters = _sddmm_spmm.sinkhorn_fused_all_batched(
+        gp, valp, rp, lam, n_iter, block_n=block_n, interpret=interpret,
+        tol=tol, check_every=check_every, gemm=gemm, log_domain=log_domain)
+    return (wmd[:, :n], iters) if with_iters else wmd[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "n_iter", "interpret"))
+@functools.partial(jax.jit, static_argnames=("lam", "n_iter", "interpret",
+                                             "tol", "check_every",
+                                             "precision"))
 def sinkhorn_wmd_kernel(r, vecs_sel, vecs, docs: PaddedDocs, lam: float,
-                        n_iter: int, interpret: bool | None = None):
+                        n_iter: int, interpret: bool | None = None,
+                        tol=None, check_every: int = 4, precision=None):
     """Full kernel-path WMD: cdist_exp -> gather (XLA) -> fused solver.
 
     The gather between the two kernels stays in XLA (TPU gather over the
     vocab axis); everything else runs in Pallas. GM is reconstructed from G
     inside the solver, so only one (v_r, N, L) array is ever materialized.
+
+    ``tol``/``check_every`` select the convergence-adaptive loop;
+    ``precision`` (a ``SolvePrecision`` or its string spelling) plumbs the
+    bf16-GEMM and log-domain policies through ``cdist_exp``'s epilogue and
+    the fused solver — under ``log_domain`` the kernel emits
+    UNexponentiated log K, so no column can underflow at any lam.
     """
-    k = cdist_exp(vecs_sel, vecs, r, lam, interpret=interpret, k_only=True)
+    from repro.core.sinkhorn_sparse import SolvePrecision
+    precision = SolvePrecision.parse(precision)
+    k = cdist_exp(vecs_sel, vecs, r, lam, interpret=interpret, k_only=True,
+                  gemm=precision.gemm, log_k=precision.log_domain)
     g = jnp.take(k, docs.idx, axis=1)          # (v_r, N, L)
     return sinkhorn_fused_all(g, docs.val, r, lam, n_iter,
-                              interpret=interpret)
+                              interpret=interpret, tol=tol,
+                              check_every=check_every, gemm=precision.gemm,
+                              log_domain=precision.log_domain)

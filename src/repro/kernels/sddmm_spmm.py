@@ -50,9 +50,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# single source of truth for the GM = -G*log(G)/lam rebuild; pure jnp, so it
-# traces inside Pallas kernel bodies too
-from repro.core.sinkhorn_sparse import reconstruct_gm
+# single source of truth for the GM = -G*log(G)/lam rebuild and the
+# adaptive-exit machinery; pure jnp/lax, so they trace inside Pallas
+# kernel bodies too
+from repro.core.sinkhorn_sparse import (adaptive_loop, marginal_residual,
+                                        reconstruct_gm)
 
 
 def _safe_inv(x):
@@ -92,11 +94,28 @@ def sddmm_spmm_step(g: jax.Array, g_over_r: jax.Array, val: jax.Array,
     )(g, g_over_r, val, x)
 
 
-def _solve_block(g, val, r, n_iter: int, lam: float):
+def _solve_block(g, val, r, n_iter: int, lam: float, tol=None,
+                 check_every: int = 4, gemm: str = "fp32",
+                 log_domain: bool = False):
     """Shared solver body: one (v_r, bn, L) G tile resident in VMEM.
 
-    g (v_r, bn, L); val (bn, L); r (v_r, 1). Returns wmd (bn,).
+    g (v_r, bn, L); val (bn, L); r (v_r, 1). Returns (wmd (bn,), iters).
+
+    ``tol`` switches the fixed ``fori_loop`` to a ``lax.while_loop`` with
+    a residual epilogue: the doc-marginal residual ``max|val/t - w_prev|``
+    (relative to each doc's own marginal scale, live slots only) is
+    checked every ``check_every`` iterations and each grid block exits
+    independently — inert pad blocks (w == 0 throughout) exit at the
+    first check. ``gemm="bf16"`` runs both reductions with bf16 operands
+    and fp32 accumulation. ``log_domain=True`` takes ``g`` as
+    UNexponentiated log K (pad rows -inf), column-stabilizes it in VMEM,
+    and adds the exact shift correction to the distance line.
     """
+    shift = None
+    if log_domain:
+        shift = jnp.max(g, axis=0)                     # (bn, L)
+        shift = jnp.where(jnp.isfinite(shift), shift, 0.0)
+        g = jnp.where(jnp.isfinite(g), jnp.exp(g - shift[None]), 0.0)
     gor = g * _safe_inv(r)[:, :, None]    # padded rows: r inv -> 0 is fine,
     # but r pad is 1.0 by contract; g pad rows are 0 so gor pad rows are 0.
     v_r = g.shape[0]
@@ -106,69 +125,123 @@ def _solve_block(g, val, r, n_iter: int, lam: float):
     x0 = jnp.where(rowmask, 1.0 / jnp.sum(rowmask.astype(g.dtype)), 0.0)
     x = jnp.broadcast_to(x0[:, None], (v_r, bn)).astype(g.dtype)
 
-    def body(_, x):
-        u = _safe_inv(x)
-        t = jnp.sum(g * u[:, :, None], axis=0)
-        w = val * _safe_inv(t) * live
-        return jnp.sum(gor * w[None, :, :], axis=2)
+    # bf16 policy = bf16-ROUNDED OPERANDS with fp32 products/accumulation
+    # (cast through bf16, multiply in fp32 — matching the einsum paths'
+    # preferred_element_type semantics; rounding each product to bf16
+    # would drift further for long docs)
+    gd = jnp.bfloat16 if gemm == "bf16" else None
+    gb = g if gd is None else g.astype(gd).astype(jnp.float32)
+    gorb = gor if gd is None else gor.astype(gd).astype(jnp.float32)
 
-    x = jax.lax.fori_loop(0, n_iter, body, x)
+    def _rnd(a):
+        return a if gd is None else a.astype(gd).astype(jnp.float32)
+
+    def _sddmm(u):
+        return jnp.sum(gb * _rnd(u)[:, :, None], axis=0)
+
+    def _spmm(w):
+        return jnp.sum(gorb * _rnd(w)[None, :, :], axis=2)
+
+    def one(x):
+        u = _safe_inv(x)
+        t = _sddmm(u)
+        w = val * _safe_inv(t) * live
+        return _spmm(w), w
+
+    if tol is None:
+        x = jax.lax.fori_loop(0, n_iter, lambda _, x: one(x)[0], x)
+        iters = jnp.asarray(n_iter, jnp.int32)
+    else:
+        x, iters = adaptive_loop(
+            one, lambda w, wp: marginal_residual(w, wp, live > 0),
+            x, n_iter, tol, check_every, use_fori=True)
+
     u = _safe_inv(x)
-    t = jnp.sum(g * u[:, :, None], axis=0)
+    t = _sddmm(u)
     w = val * _safe_inv(t) * live
     gm = reconstruct_gm(g, lam)           # in VMEM; never touches HBM
     # final line: wmd[j] = sum_k u[k,j] * sum_l GM[k,j,l] w[j,l]
-    return jnp.sum(u * jnp.sum(gm * w[None, :, :], axis=2), axis=0)  # (bn,)
+    wmd = jnp.sum(u * jnp.sum(gm * w[None, :, :], axis=2), axis=0)  # (bn,)
+    if log_domain:
+        # exact rescale correction (t*w == val on live slots)
+        wmd = wmd - jnp.sum(shift * val, axis=1) / lam
+    return wmd, iters
 
 
-def _fused_kernel(g_ref, val_ref, r_ref, wmd_ref, *, n_iter: int, lam: float):
-    wmd = _solve_block(g_ref[...], val_ref[...], r_ref[...], n_iter, lam)
+def _fused_kernel(g_ref, val_ref, r_ref, wmd_ref, it_ref, *, n_iter: int,
+                  lam: float, tol, check_every: int, gemm: str,
+                  log_domain: bool):
+    wmd, iters = _solve_block(g_ref[...], val_ref[...], r_ref[...], n_iter,
+                              lam, tol, check_every, gemm, log_domain)
     wmd_ref[...] = wmd[None, :]
+    it_ref[...] = jnp.full((1, 1), iters, jnp.int32)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("lam", "n_iter", "block_n", "interpret"))
+                   static_argnames=("lam", "n_iter", "block_n", "interpret",
+                                    "tol", "check_every", "gemm",
+                                    "log_domain"))
 def sinkhorn_fused_all(g: jax.Array, val: jax.Array, r: jax.Array, lam: float,
                        n_iter: int, block_n: int = 128,
-                       interpret: bool = False) -> jax.Array:
+                       interpret: bool = False, tol=None,
+                       check_every: int = 4, gemm: str = "fp32",
+                       log_domain: bool = False):
     """Whole Sinkhorn solve + WMD for all docs; one HBM pass over G.
 
     g: (v_r, N, L); val: (N, L); r: (v_r,) with padded rows == 1.0 and
-    padded G rows == 0; lam: the K = exp(-lam*M) strength (static; needed
-    to reconstruct GM in VMEM). Returns wmd (N,).
+    padded G rows == 0 (or -inf when ``log_domain`` — ``g`` then holds
+    log K); lam: the K = exp(-lam*M) strength (static; needed to
+    reconstruct GM in VMEM). Returns (wmd (N,), iters (N // block_n,)) —
+    realized iteration count per doc block (== ``n_iter`` for the fixed
+    loop; see :func:`_solve_block` for the adaptive/precision knobs).
     """
     v_r, n, length = g.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)
-    wmd = pl.pallas_call(
-        functools.partial(_fused_kernel, n_iter=n_iter, lam=lam),
+    wmd, iters = pl.pallas_call(
+        functools.partial(_fused_kernel, n_iter=n_iter, lam=lam, tol=tol,
+                          check_every=check_every, gemm=gemm,
+                          log_domain=log_domain),
         grid=grid,
         in_specs=[pl.BlockSpec((v_r, block_n, length), lambda i: (0, i, 0)),
                   pl.BlockSpec((block_n, length), lambda i: (i, 0)),
                   pl.BlockSpec((v_r, 1), lambda i: (0, 0))],
-        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, n), g.dtype),
+        out_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i)),
+                   pl.BlockSpec((1, 1), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((1, n), g.dtype),
+                   jax.ShapeDtypeStruct((1, n // block_n), jnp.int32)],
         interpret=interpret,
     )(g, val, r.reshape(-1, 1))
-    return wmd[0]
+    return wmd[0], iters[0]
 
 
-def _fused_batched_kernel(g_ref, val_ref, r_ref, wmd_ref, *, n_iter: int,
-                          lam: float):
-    wmd = _solve_block(g_ref[0], val_ref[...], r_ref[0], n_iter, lam)
+def _fused_batched_kernel(g_ref, val_ref, r_ref, wmd_ref, it_ref, *,
+                          n_iter: int, lam: float, tol, check_every: int,
+                          gemm: str, log_domain: bool):
+    wmd, iters = _solve_block(g_ref[0], val_ref[...], r_ref[0], n_iter, lam,
+                              tol, check_every, gemm, log_domain)
     wmd_ref[...] = wmd[None, :]
+    it_ref[...] = jnp.full((1, 1), iters, jnp.int32)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("lam", "n_iter", "block_n", "interpret"))
+                   static_argnames=("lam", "n_iter", "block_n", "interpret",
+                                    "tol", "check_every", "gemm",
+                                    "log_domain"))
 def sinkhorn_fused_all_batched(g: jax.Array, val: jax.Array, r: jax.Array,
                                lam: float, n_iter: int, block_n: int = 128,
-                               interpret: bool = False) -> jax.Array:
+                               interpret: bool = False, tol=None,
+                               check_every: int = 4, gemm: str = "fp32",
+                               log_domain: bool = False):
     """Batched solver: Q queries against one shared corpus in one launch.
 
-    g: (Q, v_r, N, L) per-query gathered kernels; val: (N, L) shared
-    corpus frequencies; r: (Q, v_r) with the same padding contract as
-    :func:`sinkhorn_fused_all` per query row. Returns wmd (Q, N).
+    g: (Q, v_r, N, L) per-query gathered kernels (log K when
+    ``log_domain``); val: (N, L) shared corpus frequencies; r: (Q, v_r)
+    with the same padding contract as :func:`sinkhorn_fused_all` per query
+    row. Returns (wmd (Q, N), iters (Q, N // block_n)) — each grid block
+    records its own realized iteration count, and with ``tol`` set each
+    block EXITS independently (per-block early exit; inert pad blocks exit
+    at the first residual check).
 
     Grid is (Q, N // block_n): the doc axis varies fastest so each query's
     corpus sweep is contiguous; ``val`` blocks depend only on the doc index
@@ -178,13 +251,17 @@ def sinkhorn_fused_all_batched(g: jax.Array, val: jax.Array, r: jax.Array,
     assert n % block_n == 0, (n, block_n)
     grid = (q, n // block_n)
     return pl.pallas_call(
-        functools.partial(_fused_batched_kernel, n_iter=n_iter, lam=lam),
+        functools.partial(_fused_batched_kernel, n_iter=n_iter, lam=lam,
+                          tol=tol, check_every=check_every, gemm=gemm,
+                          log_domain=log_domain),
         grid=grid,
         in_specs=[pl.BlockSpec((1, v_r, block_n, length),
                                lambda qi, i: (qi, 0, i, 0)),
                   pl.BlockSpec((block_n, length), lambda qi, i: (i, 0)),
                   pl.BlockSpec((1, v_r, 1), lambda qi, i: (qi, 0, 0))],
-        out_specs=pl.BlockSpec((1, block_n), lambda qi, i: (qi, i)),
-        out_shape=jax.ShapeDtypeStruct((q, n), g.dtype),
+        out_specs=[pl.BlockSpec((1, block_n), lambda qi, i: (qi, i)),
+                   pl.BlockSpec((1, 1), lambda qi, i: (qi, i))],
+        out_shape=[jax.ShapeDtypeStruct((q, n), g.dtype),
+                   jax.ShapeDtypeStruct((q, n // block_n), jnp.int32)],
         interpret=interpret,
     )(g, val, r.reshape(q, v_r, 1))

@@ -63,11 +63,15 @@ def serve_wmd(args) -> None:
     corpus = make_corpus(vocab_size=args.vocab, embed_dim=args.embed_dim,
                          n_docs=args.n_docs, n_queries=8, seed=0)
     # corpus side frozen ONCE; every request after this touches only its
-    # own (v_r, ...) slice of work
+    # own (v_r, ...) slice of work ('auto'/numeric strings parsed by
+    # build_index itself)
     index = build_index(corpus.docs, corpus.vecs,
                         n_clusters=args.n_clusters)
     engine = WmdEngine(index, lam=args.lam, n_iter=args.n_iter,
-                       impl=args.impl)
+                       impl=args.impl,
+                       tol=args.tol if args.tol > 0 else None,
+                       check_every=args.check_every,
+                       precision=args.precision)
     reqs = wmd_request_stream(corpus)
     bq = max(1, args.batch_queries)
     prune = None if args.prune == "none" else args.prune
@@ -100,7 +104,13 @@ def serve_wmd(args) -> None:
         "ms_per_batch_p50": round(p50, 2),
         "queries_per_s": round(bq / (p50 / 1e3), 1),
         "docs_per_s": round(bq * args.n_docs / (p50 / 1e3), 0),
+        "precision": engine.precision.name,
     }
+    iters = engine.iter_stats()
+    if args.tol > 0 and iters.size:
+        rec["tol"] = args.tol
+        rec["solve_iters_mean"] = round(float(iters.mean()), 1)
+        rec["solve_iters_max"] = int(iters.max())
     if args.top_k > 0:
         rec["top_k"] = args.top_k
         rec["prune"] = args.prune
@@ -132,9 +142,23 @@ def main() -> None:
                     help="ivf cascades: probe this many clusters per query "
                          "(0 = all = exact top-k; fewer trades recall for "
                          "prune speed)")
-    ap.add_argument("--n-clusters", type=int, default=None,
+    ap.add_argument("--n-clusters", default=None,
                     help="IVF cluster count at index build (default: "
-                         "sqrt(n_docs))")
+                         "sqrt(n_docs); 'auto' sweeps cluster-radius "
+                         "statistics — dedup-style corpora want more)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "log", "bf16+log"],
+                    help="solve-stage precision policy: bf16 GEMMs with "
+                         "fp32 accumulation and/or the log-domain kernel "
+                         "(underflow-free at any lam)")
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="> 0: convergence-adaptive solve — exit the "
+                         "Sinkhorn loop at this relative doc-marginal "
+                         "residual; --n-iter becomes a cap (realized counts "
+                         "land on 1 + k*check-every)")
+    ap.add_argument("--check-every", type=int, default=4,
+                    help="adaptive solve: iterations between residual "
+                         "checks")
     ap.add_argument("--n-docs", type=int, default=1024)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--embed-dim", type=int, default=64)

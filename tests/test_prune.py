@@ -40,9 +40,12 @@ def engine(corpus):
 
 
 def _bounds(engine, queries):
-    """(wcd, rwmd) lower bounds via the engine's own staging."""
+    """(wcd, rwmd) lower bounds via the engine's own staging, mapped from
+    the index's cluster-major STORAGE doc order back to caller order (the
+    order engine.query_batch scores are in)."""
     _, chunks = engine._plan(queries)
     n = engine.index.n_docs
+    ext = engine.index.ext_ids
     wcd = np.zeros((len(queries), n))
     rwmd = np.zeros((len(queries), n))
     for chunk, width in chunks:
@@ -51,7 +54,8 @@ def _bounds(engine, queries):
         w = np.asarray(WcdPruner().lower_bounds(engine.index, sup, r, mask))
         rw = np.asarray(RwmdPruner().lower_bounds(engine.index, sup, r,
                                                   mask))
-        wcd[chunk], rwmd[chunk] = w[:len(chunk)], rw[:len(chunk)]
+        wcd[np.ix_(chunk, ext)] = w[:len(chunk)]
+        rwmd[np.ix_(chunk, ext)] = rw[:len(chunk)]
     return wcd, rwmd
 
 
@@ -246,8 +250,14 @@ def test_append_docs_matches_rebuild(corpus):
     for ga, gb in zip(appended.groups, base.groups):
         if ga.cols.shape[0] == gb.cols.shape[0]:
             assert ga.docs.idx is gb.docs.idx
-    np.testing.assert_allclose(np.asarray(appended.centroids),
-                               np.asarray(rebuilt.centroids),
+    # centroids live in cluster-major STORAGE order, which differs between
+    # the appended and rebuilt indexes — compare in caller doc order
+    def by_caller(index):
+        out = np.empty_like(np.asarray(index.centroids))
+        out[index.ext_ids] = np.asarray(index.centroids)
+        return out
+
+    np.testing.assert_allclose(by_caller(appended), by_caller(rebuilt),
                                rtol=1e-5, atol=1e-6)
     queries = list(full.queries)
     ea = WmdEngine(appended, lam=8.0, n_iter=12)
