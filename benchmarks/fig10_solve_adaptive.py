@@ -25,6 +25,31 @@ solve on the fig8 near-duplicate corpus:
    scale (~11) underflows fp32 ``exp(-lam*M)`` — ASSERTED to raise
    ``LamUnderflowError`` on the legacy path — while ``precision="log"``
    completes with finite distances (asserted) at ordinary cost.
+5. *per-query scope A/B* (ISSUE 5): through ``WmdEngine.search`` at
+   lam=1 (fp32) and lam=9 (log domain) — the regimes where the
+   chunk-global residual runs to the cap — per-query scoping freezes
+   each query at its own convergence: ASSERTED top-k consistent with
+   the fixed-iteration reference (exact set identity in the convergent
+   lam=1 smoke config; tolerance-band membership elsewhere — cap-bound
+   runs overshoot by up to check_every-1 iterations and flip dup-group
+   near-ties) and realized mean iterations strictly below the cap
+   wherever any query can genuinely freeze (lam=1 at both sizes; lam=9
+   at the N=1024 CI config, where exhausted candidate scopes freeze
+   structurally — at N=8192 every lam=9 scope stays contested and the
+   loop CORRECTLY runs to the cap, asserted as bounded by the
+   documented overshoot). The chunk-scoped counterfactual is recorded
+   alongside (``iter_stats`` charges a chunk exit to every live query,
+   so the two series measure the same per-query unit).
+6. *warm-start A/B* (ISSUE 5): same run, ``warm_start=True`` vs cold —
+   survivor solves starting from the seed solve's converged per-query
+   profile are ASSERTED to realize a strictly lower mean iteration
+   count at lam=1 (where the adaptive exit genuinely converges; at
+   lam=9 the cap binds and warm-starting is correctly inert, reported
+   not asserted).
+
+The per-query/warm series land in the CI trajectory as ``fig10.iters_*``
+records (gated by ``benchmarks/compare.py`` — convergence regressions
+fail independent of wall-clock noise).
 
 Solver-rate note: Sinkhorn's convergence rate degrades as ``lam`` grows
 (the kernel approaches the LP limit), so the A/B runs at ``LAM = 0.25``
@@ -55,6 +80,13 @@ CHECK_EVERY = 2
 K = 10
 BF16_RTOL = 5e-2  # documented bf16 distance tolerance vs fp32
 LAM_UNDERFLOW = 9.0  # the paper's lam; underflows fp32 K on this corpus
+
+# per-query scope A/B (ISSUE 5): search-stage operating point — the cap
+# is deliberately ABOVE the paper's 15 so there is convergence headroom
+# for the scoped exit to realize (at lam>=1 nothing converges by 15)
+PQ_CAP = 60
+PQ_TOL = 1e-2
+PQ_LAMS = (1.0, LAM_UNDERFLOW)  # lam=9 rides the log-domain path
 
 
 def _stage(engine, queries):
@@ -132,6 +164,122 @@ def _sinkhorn_dispatch_ab(fixed, adaptive, staged_f, staged_a, reps=15):
 
 def _topk(dists, k):
     return [set(np.argsort(dists[qi])[:k]) for qi in range(dists.shape[0])]
+
+
+def _assert_topk_tolerant(d_ref, res, rtol, label):
+    """Every doc the adaptive run returned must be within ``rtol`` of
+    truly top-K under the reference distances (the PR 4 bf16 gate shape:
+    near-ties inside dup groups may flip at solve tolerance, but nothing
+    outside the tolerance band may appear)."""
+    for qi in range(d_ref.shape[0]):
+        kth = np.sort(d_ref[qi])[K - 1]
+        picked = np.asarray(sorted(set(res.indices[qi].tolist())))
+        worst = d_ref[qi, picked].max()
+        assert worst <= kth * (1.0 + rtol) + 1e-3, (
+            f"{label} q{qi}: returned doc outside rtol={rtol} of top-{K}"
+        )
+
+
+def _bench_per_query(index, queries, n_docs, out):
+    """Per-query residual scoping + warm-start A/B through the search
+    pipeline (ISSUE 5). Asserts gate BEFORE any record is emitted."""
+    for lam in PQ_LAMS:
+        prec = "log" if lam >= LAM_UNDERFLOW else None
+        tag = f"lam{lam:g}"
+        fixed = WmdEngine(index, lam=lam, n_iter=PQ_CAP, precision=prec)
+        r_fix = fixed.search(queries, K, prune="rwmd")
+        ref_sets = [set(r.tolist()) for r in r_fix.indices]
+        d_ref = np.asarray(fixed.query_batch(queries))
+        engines = {}
+        for scope in ("chunk", "query"):
+            e = WmdEngine(index, lam=lam, n_iter=PQ_CAP, tol=PQ_TOL,
+                          check_every=CHECK_EVERY, precision=prec,
+                          scope=scope)
+            r = e.search(queries, K, prune="rwmd")
+            # membership gated at the solve tolerance against the
+            # exhaustive fixed reference: a cap-bound adaptive run
+            # overshoots the cap by up to check_every-1 iterations, and
+            # near-ties inside dup groups flip at that delta (the PR 4
+            # bf16-gate shape) — nothing OUTSIDE the band may appear
+            _assert_topk_tolerant(d_ref, r, 2.0 * PQ_TOL,
+                                  f"{tag} {scope}")
+            if lam < LAM_UNDERFLOW and n_docs <= 1024:
+                # the convergent regime at smoke scale holds exact set
+                # identity with the fixed reference (CI-gated config)
+                got = [set(row.tolist()) for row in r.indices]
+                assert got == ref_sets, (
+                    f"{tag} {scope}: adaptive top-{K} diverged from the "
+                    f"fixed reference"
+                )
+            engines[scope] = e
+        it_q = engines["query"].iter_stats()
+        it_c = engines["chunk"].iter_stats()
+        # the headline claim: per-query exit realizes strictly fewer
+        # iterations than the cap the fixed reference always pays. At
+        # lam=9 the freezes that pay are structural (queries whose
+        # candidate scope is exhausted) — present at the N=1024 CI
+        # config; at N=8192 every query's scope stays contested and the
+        # loop CORRECTLY runs to the cap (asserted as such: bounded by
+        # the documented check_every-1 overshoot, never beyond)
+        if lam < LAM_UNDERFLOW or n_docs <= 1024:
+            assert it_q.mean() < PQ_CAP, (tag, it_q)
+        else:
+            assert it_q.max() <= PQ_CAP + CHECK_EVERY - 1, (tag, it_q)
+        out(
+            row(
+                f"fig10.iters_pq_{tag}_n{n_docs}",
+                float(it_q.mean()),
+                f"per-query scope mean realized iters/query (cap {PQ_CAP} "
+                f"tol={PQ_TOL:g}; chunk scope pays {it_c.mean():.1f}) — "
+                f"convergence-trajectory record, not a wall time",
+            )
+        )
+        out(
+            row(
+                f"fig10.iters_chunk_{tag}_n{n_docs}",
+                float(it_c.mean()),
+                f"chunk-global scope counterfactual, same unit "
+                f"(iters/query)",
+            )
+        )
+
+        # warm-start A/B: survivor solves from the seed solve's profile
+        cold = WmdEngine(index, lam=lam, n_iter=PQ_CAP, tol=PQ_TOL,
+                         check_every=CHECK_EVERY, precision=prec,
+                         warm_start=False)
+        warm = WmdEngine(index, lam=lam, n_iter=PQ_CAP, tol=PQ_TOL,
+                         check_every=CHECK_EVERY, precision=prec,
+                         warm_start=True)
+        r_cold = cold.search(queries, K, prune="rwmd")
+        r_warm = warm.search(queries, K, prune="rwmd")
+        np.testing.assert_allclose(
+            np.sort(r_warm.distances, axis=1),
+            np.sort(r_cold.distances, axis=1), rtol=5.0 * PQ_TOL,
+            atol=1e-3)
+        sv_c = cold.iter_stats_by_stage().get("survivor")
+        sv_w = warm.iter_stats_by_stage().get("survivor")
+        if sv_c is not None and sv_c.size and sv_w is not None:
+            if lam < LAM_UNDERFLOW:
+                # the convergent regime: warm must pay strictly less
+                assert sv_w.mean() < sv_c.mean(), (tag, sv_c, sv_w)
+                regime = "converges"
+            else:
+                regime = "cap-bound: warm inert by design"
+            out(
+                row(
+                    f"fig10.iters_warm_surv_{tag}_n{n_docs}",
+                    float(sv_w.mean()),
+                    f"warm-started survivor mean (cold pays "
+                    f"{sv_c.mean():.1f}; lam={lam:g} {regime})",
+                )
+            )
+            out(
+                row(
+                    f"fig10.iters_cold_surv_{tag}_n{n_docs}",
+                    float(sv_c.mean()),
+                    "cold survivor mean, same unit (iters/query)",
+                )
+            )
 
 
 def _bench_one(n_docs: int, out) -> None:
@@ -269,6 +417,9 @@ def _bench_one(n_docs: int, out) -> None:
             f"LamUnderflowError)",
         )
     )
+
+    # per-query residual scoping + warm-start A/B (ISSUE 5)
+    _bench_per_query(index, queries, n_docs, out)
 
 
 def main(out=print) -> None:

@@ -59,6 +59,13 @@ def main() -> None:
     ap.add_argument("--check-every", type=int, default=4,
                     help="adaptive solve: iterations between residual "
                          "checks")
+    ap.add_argument("--scope", default="query", choices=["chunk", "query"],
+                    help="adaptive-exit granularity (with --tol): 'query' "
+                         "freezes each query at its own convergence, "
+                         "'chunk' keeps the global scalar exit")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="warm-start survivor solves from the seed "
+                         "solve's converged profile (with --tol)")
     ap.add_argument("--batches", type=int, default=4,
                     help="timed engine passes over the query set")
     ap.add_argument("--looped", action="store_true",
@@ -100,7 +107,8 @@ def main() -> None:
         engine = WmdEngine(index, lam=LAM, n_iter=15, impl=args.impl,
                            tol=args.tol if args.tol > 0 else None,
                            check_every=args.check_every,
-                           precision=args.precision)
+                           precision=args.precision, scope=args.scope,
+                           warm_start=args.warm_start)
         res = engine.search(queries, args.topk, prune=prune,
                             nprobe=nprobe)                # compile pass
         batch_ms = []
@@ -123,8 +131,13 @@ def main() -> None:
     if not args.looped and args.tol > 0:
         iters = engine.iter_stats()
         if iters.size:
-            print(f"adaptive solve: realized iters mean={iters.mean():.1f} "
-                  f"max={int(iters.max())} (cap 15, tol={args.tol:g})")
+            stages = ", ".join(
+                f"{st}={arr.mean():.1f}" for st, arr in
+                engine.iter_stats_by_stage().items() if arr.size)
+            print(f"adaptive solve: realized iters/query "
+                  f"mean={iters.mean():.1f} max={int(iters.max())} "
+                  f"(cap 15, tol={args.tol:g}, scope={args.scope}; "
+                  f"per-stage means: {stages})")
 
 
 if __name__ == "__main__":

@@ -33,8 +33,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .sinkhorn import LamUnderflowError, cdist, underflow_report
-from .sinkhorn_sparse import (adaptive_loop, marginal_residual,
-                              reconstruct_gm)
+from .sinkhorn_sparse import (adaptive_loop_scoped,
+                              marginal_residual_per_query, reconstruct_gm)
 from .sparse import PaddedDocs
 
 
@@ -105,11 +105,13 @@ def _check_underflow(out, lam, vecs_sel, vecs, docs):
     """Host-side lam-hygiene guard shared by the distributed solvers: a K
     underflow poisons every affected shard's distances with NaN — raise the
     same diagnosed :class:`LamUnderflowError` the engine raises instead of
-    returning (and all-reducing) NaN."""
+    returning (and all-reducing) NaN. Batched (Q, v_r, w) support stacks
+    are flattened for the report (it diagnoses per support word)."""
     import numpy as np
 
     if vecs_sel.shape[0] > 0 and np.isnan(np.asarray(out)).any():
-        raise LamUnderflowError(underflow_report(lam, vecs_sel, vecs, docs))
+        sel2 = jnp.reshape(vecs_sel, (-1, vecs_sel.shape[-1]))
+        raise LamUnderflowError(underflow_report(lam, sel2, vecs, docs))
     return out
 
 
@@ -118,7 +120,9 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
                                     vshard_precompute: bool = True,
                                     check_underflow: bool = True,
                                     tol: float | None = None,
-                                    check_every: int = 4):
+                                    check_every: int = 4,
+                                    qmask=None,
+                                    return_iters: bool = False):
     """ELL fused Sinkhorn with docs sharded over every mesh axis.
 
     ``vshard_precompute=False``: baseline — every chip computes the full
@@ -139,37 +143,58 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     diagnosis (``check_underflow=False`` opts out — the check syncs the
     sharded result).
 
-    ``tol`` enables the convergence-adaptive loop (ISSUE 4): every
-    ``check_every`` iterations each shard computes its local doc-marginal
-    residual and ONE ``lax.pmax`` over the doc axes all-reduces it, so
-    every shard exits at the same (earliest safe) iteration — the loop
-    stays collective-free except for that scalar. ``n_iter`` becomes a
-    cap (realized counts land on ``1 + k*check_every``, overshooting it
-    by at most ``check_every - 1``).
+    Batched queries (ISSUE 5): ``r`` may be (Q, v_r) with ``vecs_sel``
+    (Q, v_r, w) — the solve runs all Q queries against the shared doc
+    shards in one launch and returns (Q, N). ``qmask`` (Q, v_r) marks
+    live support rows when queries were padded to a common ``v_r``
+    (padded rows: ``r == 1``, ``qmask == 0``; their G rows are zeroed so
+    they stay inert, the engine's padding contract).
+
+    ``tol`` enables the convergence-adaptive loop: every ``check_every``
+    iterations each shard reduces its local doc-marginal residual to a
+    PER-QUERY (Q,) vector and ONE ``lax.pmax`` over the doc axes
+    all-reduces that vector — still a single collective per check (ISSUE
+    4's scalar became ISSUE 5's (Q,) vector). Every shard therefore
+    freezes the same queries at the same (earliest safe) iteration:
+    converged queries' x-columns stop updating while stubborn batch-mates
+    run on, and the loop exits when all live queries converged or the
+    ``n_iter`` cap hits (realized counts land on ``1 + k*check_every``,
+    overshooting the cap by at most ``check_every - 1``).
+    ``return_iters=True`` also returns the per-query realized counts
+    ((Q,) int32; scalar-shaped (1,) for a single query).
     """
     doc_axes = _doc_axes(mesh)
     docs_spec = P(doc_axes)
-    out_spec = P(doc_axes)
+    batched = jnp.ndim(r) == 2
+    out_spec = P(None, doc_axes) if batched else P(doc_axes)
     # the adaptive path's lax.while_loop has no shard_map replication rule
     # (jax #workaround) — drop the rep check only when it is in play
     rep = {} if tol is None else {"check_rep": False}
+
+    def finish(out_iters):
+        out, iters = out_iters
+        if check_underflow:
+            _check_underflow(out, lam, vecs_sel, vecs, docs)
+        return (out, iters) if return_iters else out
 
     if not vshard_precompute:
         @functools.partial(
             shard_map, mesh=mesh,
             in_specs=(P(), P(), P(), docs_spec, docs_spec),
-            out_specs=out_spec, **rep)
+            out_specs=(out_spec, P()), **rep)
         def run(r, vecs_sel, vecs_full, idx_loc, val_loc):
-            m = cdist(vecs_sel, vecs_full)                 # replicated (v_r, V)
+            sel2 = vecs_sel.reshape(-1, vecs_sel.shape[-1])
+            m = cdist(sel2, vecs_full)            # replicated (Q*v_r, V)
             k = jnp.exp(-lam * m)
-            g = jnp.take(k, idx_loc, axis=1)
-            return _ell_loop(r, g, val_loc, lam, n_iter, doc_axes,
-                             tol=tol, check_every=check_every)
+            g = jnp.take(k, idx_loc, axis=1)      # (Q*v_r, N_loc, L)
+            if batched:
+                g = g.reshape(r.shape + idx_loc.shape)
+            out, iters = _ell_loop(r, g, val_loc, lam, n_iter, doc_axes,
+                                   tol=tol, check_every=check_every,
+                                   qmask=qmask)
+            return (out if batched else out[0]), iters
 
-        out = run(r, vecs_sel, vecs, docs.idx, docs.val)
-        if check_underflow:
-            _check_underflow(out, lam, vecs_sel, vecs, docs)
-        return out
+        return finish(run(r, vecs_sel, vecs, docs.idx, docs.val))
 
     # optimized: vocab-sharded precompute, psum_scatter-assembled gather.
     # Docs enter sharded over the data axes and REPLICATED over model; each
@@ -182,15 +207,18 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     v = vecs.shape[0]
     v_loc_size = v // n_model
     data_axes = _data_axes(mesh)
+    vs_out = (P(None, data_axes + ("model",)) if batched
+              else P(data_axes + ("model",)))
 
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P(), P(), P("model"), P(data_axes), P(data_axes)),
-        out_specs=P(data_axes + ("model",)), **rep)
+        out_specs=(vs_out, P()), **rep)
     def run(r, vecs_sel, vecs_loc, idx_loc, val_loc):
         midx = lax.axis_index("model")
         lo = midx * v_loc_size
-        m = cdist(vecs_sel, vecs_loc)                      # (v_r, V_loc)
+        sel2 = vecs_sel.reshape(-1, vecs_sel.shape[-1])
+        m = cdist(sel2, vecs_loc)                 # (Q*v_r, V_loc)
         k = jnp.exp(-lam * m)
         # gather only ids this chip owns; others contribute zeros to the sum
         rel = idx_loc - lo
@@ -202,61 +230,96 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
         g = lax.psum_scatter(g, "model", scatter_dimension=1, tiled=True)
         n_slice = val_loc.shape[0] // n_model
         val_my = lax.dynamic_slice_in_dim(val_loc, midx * n_slice, n_slice, 0)
-        return _ell_loop(r, g, val_my, lam, n_iter,
-                         data_axes + ("model",), tol=tol,
-                         check_every=check_every)
+        if batched:
+            g = g.reshape(r.shape + (n_slice, idx_loc.shape[1]))
+        out, iters = _ell_loop(r, g, val_my, lam, n_iter,
+                               data_axes + ("model",), tol=tol,
+                               check_every=check_every, qmask=qmask)
+        return (out if batched else out[0]), iters
 
-    out = run(r, vecs_sel, vecs, docs.idx, docs.val)
-    if check_underflow:
-        _check_underflow(out, lam, vecs_sel, vecs, docs)
-    return out
+    return finish(run(r, vecs_sel, vecs, docs.idx, docs.val))
 
 
 def _ell_loop(r, g, val, lam, n_iter, vary_axes=(), tol=None,
-              check_every: int = 4):
+              check_every: int = 4, qmask=None):
     """The collective-free fused SDDMM_SpMM iteration (per shard).
 
-    With ``tol`` set, the fixed scan becomes a ``lax.while_loop``: every
-    ``check_every`` iterations each shard computes the doc-marginal
-    residual ``max|val/t - w_prev|`` over its own docs (relative to each
-    doc's marginal scale, live slots only) and one scalar ``lax.pmax``
-    over ``vary_axes`` agrees on the global residual — all shards share
-    one exit decision, so the carries stay consistent for the final
-    distance line.
+    Accepts one query (``g`` (v_r, N_loc, L), ``r`` (v_r,)) or a batch
+    (``g`` (Q, v_r, N_loc, L), ``r`` (Q, v_r)); internally everything is
+    the batched layout (a single query is Q == 1) so there is ONE copy of
+    the loop. Returns ((Q, N_loc) wmd, (Q,) realized iterations).
+
+    With ``tol`` set, the fixed scan becomes the per-query
+    :func:`~repro.core.sinkhorn_sparse.adaptive_loop_scoped`: every
+    ``check_every`` iterations each shard reduces its local doc-marginal
+    residual ``max|val/t - w_prev|`` per query and one (Q,)-vector
+    ``lax.pmax`` over ``vary_axes`` agrees on them globally — all shards
+    freeze the same queries at the same iteration, so the carries stay
+    consistent for the final distance line.
     """
-    v_r = g.shape[0]
-    n_loc, length = val.shape
-    g_over_r = g / r[:, None, None]
+    if g.ndim == 3:
+        g, r = g[None], jnp.reshape(r, (1, -1))
+    q, v_r, n_loc, length = g.shape
+    g_over_r = g / r[:, :, None, None]
+    if qmask is not None:
+        # padded support rows are structurally inert: G rows zeroed, u
+        # rows masked (their x decays to 0 after one iteration)
+        g = g * qmask[:, :, None, None]
+        g_over_r = g_over_r * qmask[:, :, None, None]
     live = val > 0
-    x = jnp.full((v_r, n_loc), 1.0 / v_r, dtype=g.dtype)
+    n_live = (jnp.sum(qmask, axis=1) if qmask is not None
+              else jnp.full((q,), v_r, g.dtype))
+    x0 = 1.0 / jnp.maximum(n_live, 1.0)
+    x = jnp.broadcast_to(x0[:, None, None], (q, v_r, n_loc)).astype(g.dtype)
+    if qmask is not None:
+        x = x * qmask[:, :, None]
     if vary_axes:
         x = _pvary(x, tuple(vary_axes))  # match shard-varying carry type
 
+    def u_of(x):
+        if qmask is None:
+            return 1.0 / x   # raw: a K underflow must surface as NaN
+        return jnp.where(qmask[:, :, None] > 0, 1.0 / jnp.where(
+            qmask[:, :, None] > 0, x, 1.0), 0.0)
+
     def step(carry, _):
         x, _ = carry
-        u = 1.0 / x
-        t = jnp.einsum("knl,kn->nl", g, u)
-        w = jnp.where(live, val / t, 0.0)
-        x = jnp.einsum("knl,nl->kn", g_over_r, w)
+        u = u_of(x)
+        t = jnp.einsum("qknl,qkn->qnl", g, u)
+        w = jnp.where(live[None], val[None] / t, 0.0)
+        x = jnp.einsum("qknl,qnl->qkn", g_over_r, w)
         return (x, w), None
 
     if tol is None:
         # x-only carry — bit-identical to the pre-adaptive loop
         x, _ = lax.scan(lambda x, _: (step((x, None), None)[0][0], None),
                         x, None, length=n_iter)
+        iters = jnp.full((q,), n_iter, jnp.int32)
     else:
-        # the one collective in the loop: a scalar all-reduce so every
-        # shard takes the same exit
-        all_reduce = ((lambda r: lax.pmax(r, tuple(vary_axes)))
+        # the one collective in the loop: a (Q,) vector all-reduce so
+        # every shard freezes the same queries at the same check
+        all_reduce = ((lambda res: lax.pmax(res, tuple(vary_axes)))
                       if vary_axes else None)
-        x, _ = adaptive_loop(
-            lambda x: step((x, None), None)[0],
-            lambda w, wp: marginal_residual(w, wp, live),
-            x, n_iter, tol, check_every, all_reduce=all_reduce)
-    u = 1.0 / x
-    t = jnp.einsum("knl,kn->nl", g, u)
-    w = jnp.where(live, val / t, 0.0)
-    return jnp.einsum("kn,knl,nl->n", u, reconstruct_gm(g, lam), w)
+        live_q = (jnp.sum(qmask, axis=1) > 0 if qmask is not None
+                  else jnp.ones((q,), bool))
+        resmask = jnp.broadcast_to(live[None], (q,) + val.shape)
+
+        def step_active(x, active):
+            # frozen queries' update rows are dropped via the u mask
+            u = u_of(x) * active[:, None, None].astype(g.dtype)
+            t = jnp.einsum("qknl,qkn->qnl", g, u)
+            w = jnp.where(live[None], val[None] / t, 0.0)
+            return jnp.einsum("qknl,qnl->qkn", g_over_r, w), w
+
+        x, iters = adaptive_loop_scoped(
+            step_active,
+            lambda w, wp: marginal_residual_per_query(w, wp, resmask),
+            x, n_iter, tol, check_every, live_q, all_reduce=all_reduce)
+    u = u_of(x)
+    t = jnp.einsum("qknl,qkn->qnl", g, u)
+    w = jnp.where(live[None], val[None] / t, 0.0)
+    wmd = jnp.einsum("qkn,qknl,qnl->qn", u, reconstruct_gm(g, lam), w)
+    return wmd, iters
 
 
 def sharded_inputs(mesh: Mesh, r, vecs_sel, vecs, docs: PaddedDocs,

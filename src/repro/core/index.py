@@ -88,7 +88,8 @@ from jax import lax
 
 from .sinkhorn import LamUnderflowError, underflow_report
 from .sinkhorn_sparse import (SolvePrecision, adaptive_loop,
-                              marginal_residual)
+                              adaptive_loop_scoped, marginal_residual,
+                              marginal_residual_per_query)
 from .sparse import PaddedDocs
 
 ENGINE_IMPLS = ("sparse", "kernel")
@@ -637,7 +638,9 @@ def _stabilize_log_g(g):
 
 def _solve_batched_einsum(g, mq, idx, val, r, mask, lam, n_iter, tol=None,
                           check_every: int = 4, gemm: str = "fp32",
-                          log_domain: bool = False):
+                          log_domain: bool = False, scope: str = "chunk",
+                          qdoc_mask=None, x0q=None,
+                          with_profile: bool = False, prof_mask=None):
     """Batched ELL Sinkhorn + distance line in the CPU/XLA-friendly layout.
 
     g (Q, N, L, B): query rows on the MINOR axis, so both contractions are
@@ -658,6 +661,25 @@ def _solve_batched_einsum(g, mq, idx, val, r, mask, lam, n_iter, tol=None,
     inputs and fp32 accumulation; ``log_domain=True`` takes ``g`` as
     UNexponentiated ``log K`` (masked rows -inf) and stabilizes it per
     column before the loop.
+
+    Per-query residual scoping (ISSUE 5): ``scope="query"`` replaces the
+    chunk-global scalar exit with the per-query machinery of
+    :func:`~repro.core.sinkhorn_sparse.adaptive_loop_scoped` — each
+    query's residual is a masked segment-max over its OWN doc slots
+    (``qdoc_mask`` (Q, N) narrows that scope to the query's candidate
+    docs, so far pairs the ranking never needs stop holding its exit
+    open), queries FREEZE their x-columns once converged (their update
+    rows are zeroed — semantically dropped; the dense einsum still
+    executes at chunk width until the loop exits, so the wall-clock win
+    is the EARLIER per-query exit, not fewer FLOPs per iteration), and
+    the loop exits once every live query converged or the cap hits.
+    ``iters`` is then a (Q,) vector of per-query realized counts instead
+    of a scalar. ``x0q`` (Q, B) warm-starts every doc column from a
+    per-query profile (the engine passes the seed solve's converged
+    column mean for survivor solves); ``with_profile=True`` additionally
+    returns that (Q, B) profile — the doc-mean of the final x over
+    ``prof_mask`` docs (each query's own candidates; falls back to
+    ``qdoc_mask``, then all live docs).
 
     Distance-line epilogue (ISSUE 4): instead of reconstructing
     ``GM = -G*log(G)/lam`` (a transcendental over the whole nnz tensor —
@@ -693,7 +715,12 @@ def _solve_batched_einsum(g, mq, idx, val, r, mask, lam, n_iter, tol=None,
 
     rinv = _safe_inv(r)[:, None, :]                     # (Q, 1, B)
     denom = jnp.sum(mask, axis=1, keepdims=True)
-    x0 = jnp.where(mask > 0, 1.0 / jnp.maximum(denom, 1.0), 0.0)
+    if x0q is None:
+        x0 = jnp.where(mask > 0, 1.0 / jnp.maximum(denom, 1.0), 0.0)
+    else:
+        # warm start: the caller's per-query profile, zeroed on pad slots
+        # (a frozen profile can only carry mass on the query's live words)
+        x0 = jnp.where(mask > 0, x0q, 0.0)
     x = jnp.broadcast_to(x0[:, None, :], (q, n, b)).astype(jnp.float32)
 
     def _select_w(t):
@@ -723,7 +750,7 @@ def _solve_batched_einsum(g, mq, idx, val, r, mask, lam, n_iter, tol=None,
         x, _ = lax.scan(lambda x, _: (step((x, None), None)[0][0], None),
                         x, None, length=n_iter)
         iters = jnp.asarray(n_iter, jnp.int32)
-    else:
+    elif scope == "chunk":
         # residual mask: live queries (any support) x live doc slots —
         # filler queries' w is inf/NaN and padded docs' is 0; both are
         # excluded so they can neither hold the loop open nor close it
@@ -733,6 +760,27 @@ def _solve_batched_einsum(g, mq, idx, val, r, mask, lam, n_iter, tol=None,
             lambda x: step((x, None), None)[0],
             lambda w, wp: marginal_residual(w, wp, resmask),
             x, n_iter, tol, check_every)
+    else:
+        # per-query scope (ISSUE 5): each query's residual covers only
+        # its own live slots — narrowed to its candidate docs when the
+        # caller provides qdoc_mask — and converged queries freeze
+        live_q = jnp.sum(mask, axis=1) > 0              # (Q,)
+        resmask = live_q[:, None, None] & live[None]    # (Q, N, L)
+        if qdoc_mask is not None:
+            resmask = resmask & qdoc_mask[:, :, None]
+
+        def step_active(x, active):
+            # frozen queries' rows drop out of the update: their u rows
+            # are zeroed, so SDDMM/SpMM emit zeros the freeze discards
+            u = jnp.where(x > 0, 1.0 / x, 0.0) * active[:, None, None]
+            t = _sddmm(u)
+            w = _select_w(t)
+            return _spmm(w) * rinv, w
+
+        x, iters = adaptive_loop_scoped(
+            step_active,
+            lambda w, wp: marginal_residual_per_query(w, wp, resmask),
+            x, n_iter, tol, check_every, live_q)
 
     u = jnp.where(x > 0, 1.0 / x, 0.0)
     t = _sddmm(u)
@@ -741,7 +789,23 @@ def _solve_batched_einsum(g, mq, idx, val, r, mask, lam, n_iter, tol=None,
     gm = jnp.where(g > 0, g * mg, 0.0)
     # wmd[q,n] = sum_b u sum_l GM w — with the TRUE gathered M, exact for
     # the stabilized log-domain G too (G' M w' == G M w identically)
-    return jnp.einsum("qnb,qnlb,qnl->qn", u, gm, w), iters
+    wmd = jnp.einsum("qnb,qnlb,qnl->qn", u, gm, w)
+    if not with_profile:
+        return wmd, iters
+    # per-query doc-mean of the converged x: the warm-start profile
+    # survivor solves reuse (survivors share the query's gathered columns,
+    # so the converged per-word scaling transfers). Averaged over each
+    # query's OWN candidate docs (prof_mask) — the chunk union includes
+    # other queries' seeds, whose far-pair columns would pollute the
+    # profile with a wildly different scale
+    doc_live = jnp.sum(val, axis=1) > 0                       # (N,)
+    sel = prof_mask if prof_mask is not None else qdoc_mask
+    pmask = (doc_live[None] if sel is None
+             else sel & doc_live[None])                       # (Q, N)
+    pmask = pmask.astype(x.dtype)
+    cnt = jnp.maximum(jnp.sum(pmask, axis=1), 1.0)            # (Q,)
+    xprof = jnp.einsum("qnb,qn->qb", x, pmask) / cnt[:, None]
+    return wmd, iters, xprof
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "gemm", "log_domain",
@@ -810,7 +874,8 @@ def _gather_g(kq: jax.Array, idx: jax.Array, layout: str = "qnlb"):
 _solve_gathered = jax.jit(_solve_batched_einsum,
                           static_argnames=("lam", "n_iter", "tol",
                                            "check_every", "gemm",
-                                           "log_domain"))
+                                           "log_domain", "scope",
+                                           "with_profile"))
 
 
 def _prepare_query(q, bucket: int, dtype):
@@ -871,6 +936,31 @@ class WmdEngine:
                  ``n_iter`` becomes a cap (realized counts land on
                  ``1 + k*check_every``). Realized counts:
                  :meth:`iter_stats`.
+    scope:       adaptive-exit granularity (ISSUE 5). ``"query"``
+                 (default): each query's residual covers only its own
+                 live slots, converged queries freeze their x-columns
+                 (operand rows zeroed; the loop exits when every live
+                 query converged) — one stubborn query no longer holds
+                 its chunkmates' realized counts open. In :meth:`search`
+                 the survivor solve's scope narrows further to the docs
+                 whose bound passed that query's own threshold (the seed
+                 solve keeps the union scope: any seed can contend for
+                 any query once thresholds exist). ``"chunk"`` keeps
+                 ISSUE 4's chunk-global scalar exit. Only consulted when
+                 ``tol`` is set.
+    warm_start:  survivor solves in :meth:`search` start from the seed
+                 solve's converged per-query x profile instead of the
+                 uniform init (survivors share the query's gathered
+                 columns, so the scaling transfers; docs open at the
+                 profile and re-converge in fewer iterations — measured
+                 in :meth:`iter_stats_by_stage` as the ``"survivor"``
+                 series). Opt-in, and only active with ``tol`` set on
+                 the einsum path (``impl="sparse"``): warm starting is
+                 sound when the adaptive exit actually CONVERGES (both
+                 inits land within ``tol`` of the same fixed point); in
+                 a cap-bound regime (``n_iter`` hit first) it changes
+                 the truncated values, making survivor distances
+                 incomparable with the cold seed stage.
     precision:   :class:`~repro.core.sinkhorn_sparse.SolvePrecision` or
                  its spelling (``"fp32"``, ``"bf16"``, ``"log"``,
                  ``"bf16+log"``) — bf16 GEMMs with fp32 accumulation
@@ -884,10 +974,14 @@ class WmdEngine:
                  pad_q: bool = True, block_n: int = 128,
                  interpret: bool | None = None, dtype=jnp.float32,
                  prune_slack: float = 1e-3, tol: float | None = None,
-                 check_every: int = 4, precision=None):
+                 check_every: int = 4, precision=None,
+                 scope: str = "query", warm_start: bool = False):
         if impl not in ENGINE_IMPLS:
             raise ValueError(f"impl must be one of {ENGINE_IMPLS}, "
                              f"got {impl!r}")
+        if scope not in ("chunk", "query"):
+            raise ValueError(f"scope must be 'chunk' or 'query', "
+                             f"got {scope!r}")
         self.index = index
         self.lam = float(lam)
         self.n_iter = int(n_iter)
@@ -902,6 +996,8 @@ class WmdEngine:
         self.tol = None if tol is None else float(tol)
         self.check_every = int(check_every)
         self.precision = SolvePrecision.parse(precision)
+        self.scope = scope
+        self.warm_start = bool(warm_start)
         # bounded ring: a long-running service must not leak one device
         # scalar per solve dispatch forever (reset_iter_stats() clears)
         import collections
@@ -913,15 +1009,54 @@ class WmdEngine:
         """Drop the accumulated realized-iteration log."""
         self._iters_pending.clear()
 
-    def iter_stats(self) -> np.ndarray:
-        """Realized Sinkhorn iteration counts, one per solve dispatch since
-        the last :meth:`reset_iter_stats` (device scalars are synced here,
-        not on the hot path; the log keeps the most recent 4096 solves).
-        With ``tol=None`` every entry equals ``n_iter``; with the adaptive
-        loop this is the early-exit histogram the fig10 benchmark
-        reports."""
-        return np.asarray([int(i) for i in self._iters_pending],
-                          dtype=np.int64)
+    def _record_iters(self, stage: str, iters, n_live: int | None) -> None:
+        """Log one dispatch's realized counts (device values, synced
+        lazily in :meth:`iter_stats`): a scalar for chunk-scoped solves,
+        a per-query vector for ``scope="query"`` — ``n_live`` trims the
+        vector to the chunk's real queries (fillers freeze at the first
+        check and would pollute the histogram)."""
+        self._iters_pending.append((stage, iters, n_live))
+
+    def iter_stats(self, stage: str | None = None) -> np.ndarray:
+        """Realized Sinkhorn iteration counts since the last
+        :meth:`reset_iter_stats` (device values are synced here, not on
+        the hot path; the log keeps the most recent 4096 dispatches).
+        Chunk-scoped solves contribute one entry per dispatch; per-query
+        solves one entry per LIVE query per dispatch. With ``tol=None``
+        every entry equals ``n_iter``; with the adaptive loop this is the
+        early-exit histogram the fig10 benchmark reports. ``stage``
+        filters to one solve stage (``"batch"`` for exhaustive
+        :meth:`query_batch` solves, ``"seed"``/``"survivor"`` for the two
+        :meth:`search` solve stages — the warm-start win is the
+        ``"survivor"`` series)."""
+        out: list[np.ndarray] = []
+        for st, dev, n_live in self._iters_pending:
+            if stage is not None and st != stage:
+                continue
+            arr = np.atleast_1d(np.asarray(dev)).astype(np.int64)
+            if n_live is not None and arr.size > 1:
+                arr = arr[:n_live]
+            elif n_live is not None and arr.size == 1:
+                # chunk-scoped / fixed dispatch: every live query pays the
+                # chunk's exit iteration — replicate so per-query and
+                # chunk-scoped histograms measure the same unit (realized
+                # iterations PER QUERY) and the fig10 A/B is fair
+                arr = np.full(n_live, arr[0], np.int64)
+            out.append(arr)
+        if not out:
+            return np.zeros((0,), np.int64)
+        return np.concatenate(out)
+
+    def iter_stats_by_stage(self) -> dict:
+        """Realized-iteration log split by solve stage — the serve
+        metadata / fig10 view of where iterations actually go (seed
+        solves pay the cold init; warm-started survivor solves should
+        report strictly fewer)."""
+        stages = []
+        for st, _, _ in self._iters_pending:
+            if st not in stages:
+                stages.append(st)
+        return {st: self.iter_stats(stage=st) for st in stages}
 
     def _ext(self, storage_ids) -> np.ndarray:
         """Storage ids -> caller-order doc ids (the output boundary)."""
@@ -977,16 +1112,26 @@ class WmdEngine:
                 jnp.asarray(np.stack([p[1] for p in prepared])),
                 jnp.asarray(np.stack([p[2] for p in prepared])))
 
-    def _solve_group(self, kq, r, mask, grp: DocGroup):
+    def _solve_group(self, kq, r, mask, grp: DocGroup, n_live=None,
+                     stage: str = "batch", qdoc_mask=None, x0q=None,
+                     want_profile: bool = False, prof_mask=None):
         """Solve one prepared chunk against one doc group (device array,
         not yet synced): gather the group's K columns, run the batched
         solver. Works for index groups and pruned candidate subsets alike —
         the solve stage of the pipeline. ``kq`` is the (kq, mq) pair from
         :meth:`_kq`. Realized iteration counts land in :meth:`iter_stats`
-        (device scalars, synced lazily)."""
+        under ``stage`` (device values, synced lazily).
+
+        ``qdoc_mask`` (Q, N_grp) scopes each query's adaptive exit to its
+        own candidate docs (``scope="query"``); ``x0q`` (Q, B) warm-starts
+        the solve from a per-query profile; ``want_profile=True`` returns
+        ``(wmd, profile)`` — the converged profile survivor solves reuse,
+        averaged over ``prof_mask`` docs (``None`` on the kernel path,
+        which reconstructs GM in VMEM and does not expose x)."""
         kqk, mq = kq
         layout = "qbnl" if self.impl == "kernel" else "qnlb"
         g = _gather_g(kqk, grp.docs.idx, layout=layout)
+        scoped = self.tol is not None and self.scope == "query"
         if self.impl == "kernel":
             from repro.kernels.ops import sinkhorn_fused_all_batched
             wmd, iters = sinkhorn_fused_all_batched(
@@ -994,14 +1139,26 @@ class WmdEngine:
                 block_n=self.block_n, interpret=self.interpret,
                 tol=self.tol, check_every=self.check_every,
                 gemm=self.precision.gemm,
-                log_domain=self.precision.log_domain, with_iters=True)
-            self._iters_pending.append(jnp.max(iters))
-            return wmd
-        wmd, iters = _solve_gathered(g, mq, grp.docs.idx, grp.docs.val, r,
-                                     mask, self.lam, self.n_iter, self.tol,
-                                     self.check_every, self.precision.gemm,
-                                     self.precision.log_domain)
-        self._iters_pending.append(iters)
+                log_domain=self.precision.log_domain,
+                resmask=qdoc_mask if scoped else None, with_iters=True)
+            # per-block counts -> per-query realized iterations (a query's
+            # slowest candidate block is when its columns actually froze)
+            self._record_iters(stage,
+                               jnp.max(iters, axis=1) if scoped
+                               else jnp.max(iters), n_live)
+            return (wmd, None) if want_profile else wmd
+        out = _solve_gathered(g, mq, grp.docs.idx, grp.docs.val, r,
+                              mask, self.lam, self.n_iter, self.tol,
+                              self.check_every, self.precision.gemm,
+                              self.precision.log_domain,
+                              scope=self.scope,
+                              qdoc_mask=qdoc_mask if scoped else None,
+                              x0q=x0q, with_profile=want_profile,
+                              prof_mask=prof_mask)
+        wmd, iters = out[0], out[1]
+        self._record_iters(stage, iters, n_live)
+        if want_profile:
+            return wmd, out[2]
         return wmd
 
     def _kq(self, sup, mask):
@@ -1051,7 +1208,8 @@ class WmdEngine:
             sup, r, mask = self._prep_chunk([queries[qi] for qi in chunk],
                                             width)
             kq = self._kq(sup, mask)
-            parts = [(grp, self._solve_group(kq, r, mask, grp))
+            parts = [(grp, self._solve_group(kq, r, mask, grp,
+                                             n_live=len(chunk)))
                      for grp in self.index.groups]
             pending.append((chunk, parts))
         out = np.zeros((len(queries), self.index.n_docs), self.dtype)
@@ -1145,12 +1303,21 @@ class WmdEngine:
             sup, r, mask = self._prep_chunk(cq, width)
             kq = self._kq(sup, mask)              # shared by both solves
 
-            def solve(doc_ids):     # -> (qc, |ids|) np, NaN-checked
-                w = np.asarray(self._solve_group(
-                    kq, r, mask, self.index.subset(doc_ids, storage=True)))
-                w = w[:qc, :doc_ids.size]  # drop q/doc shape padding
+            def solve(doc_ids, qmask=None, stage="seed", warm=None,
+                      prof=None):
+                # -> ((qc, |ids|) np NaN-checked, warm-start profile)
+                grp = self.index.subset(doc_ids, storage=True)
+                n_pad = grp.docs.idx.shape[0]
+                qm = (None if qmask is None else self._pad_qdoc(
+                    qmask, r.shape[0], n_pad))
+                pm = (None if prof is None else self._pad_qdoc(
+                    prof, r.shape[0], n_pad))
+                w, prof_out = self._solve_group(
+                    kq, r, mask, grp, n_live=qc, stage=stage, qdoc_mask=qm,
+                    x0q=warm, want_profile=True, prof_mask=pm)
+                w = np.asarray(w)[:qc, :doc_ids.size]
                 self._raise_if_nan(w, cq)
-                return w
+                return w, prof_out
 
             cand, d_cand = self._prune_full(pruner, sup, r, mask, qc, k,
                                             solve)
@@ -1161,6 +1328,19 @@ class WmdEngine:
                 out_d[qi, :order.size] = d_cand[ci, order]
                 solved[qi] = cand.size
         return SearchResult(out_i, out_d, solved)
+
+    @staticmethod
+    def _pad_qdoc(qmask: np.ndarray, qp: int, n_pad: int) -> jax.Array:
+        """Pad a (qc, |ids|) per-query candidate mask to the solve's
+        bucketed (Qp, N_pad) shape (fillers and pad docs are False — they
+        are outside every query's residual scope by construction)."""
+        out = np.zeros((qp, n_pad), bool)
+        out[:qmask.shape[0], :qmask.shape[1]] = qmask
+        return jnp.asarray(out)
+
+    def _scoped(self) -> bool:
+        """Per-query residual scoping active for this engine's solves?"""
+        return self.tol is not None and self.scope == "query"
 
     def _threshold(self, d_seed_dev, k: int, n_seed: int):
         """Device-side pruning threshold: per-query kth-smallest exact
@@ -1177,22 +1357,48 @@ class WmdEngine:
         """PR 2's full-sweep prune stage, with seed selection and
         thresholding moved device-side: (Qc, N) argpartition/partition
         become top_k/sort on the device bound matrix, and only compact id
-        arrays (seeds, the survivor bitmap) cross to the host."""
+        arrays (seeds, the survivor bitmap) cross to the host.
+
+        With per-query scoping (ISSUE 5): the SEED solve's residual
+        covers the union of real seed docs — any chunkmate's seed can
+        contend for any query's top-k once thresholds are known, so its
+        distance must be converged for every query that might read it —
+        while each query still FREEZES individually (the win). The
+        query's OWN k picks drive only its warm-start profile; the
+        threshold keeps PR 2's chunk-union tightening (every seed
+        distance is now converged for every query, so it is sound). The
+        SURVIVOR solve's residual narrows further, to the docs whose
+        bound passed that query's threshold — a survivor outside that
+        scope is admissibly excluded from its top-k at any truncation
+        (RWMD lower-bounds the computed score, so its unconverged value
+        stays above the threshold)."""
         from .prune import _keep_any
+        scoped = self._scoped()
         lb = pruner.lower_bounds(self.index, sup, r, mask)   # (Qp, N) dev
         # seed: each query's k best-bounded docs (chunk union — extra
         # exact distances only tighten the other queries' thresholds)
         _, seed_pos = jax.lax.top_k(-lb[:qc], k)
-        seed = np.unique(np.asarray(seed_pos)).astype(np.int32)
-        d_seed = solve(seed)
+        seed_pos = np.asarray(seed_pos)
+        seed = np.unique(seed_pos).astype(np.int32)
+        qmask_seed = None
+        if scoped:
+            qmask_seed = np.stack([np.isin(seed, seed_pos[qi])
+                                   for qi in range(qc)])
+        d_seed, xprof = solve(seed, None, "seed", prof=qmask_seed)
         thresh = self._threshold(jnp.asarray(d_seed), k, seed.size)
         surv = np.nonzero(np.asarray(_keep_any(lb, thresh)))[0] \
             .astype(np.int32)
         surv = surv[~np.isin(surv, seed)]
         cand = np.concatenate([seed, surv])
-        d_cand = (np.concatenate([d_seed, solve(surv)], axis=1)
-                  if surv.size else d_seed)
-        return cand, d_cand
+        if not surv.size:
+            return cand, d_seed
+        qmask_surv = None
+        if scoped:
+            qmask_surv = (np.asarray(lb[:qc, surv])
+                          <= np.asarray(thresh)[:qc, None])
+        warm = xprof if (self.warm_start and self.tol is not None) else None
+        d_surv, _ = solve(surv, qmask_surv, "survivor", warm=warm)
+        return cand, np.concatenate([d_seed, d_surv], axis=1)
 
     def _search_cascade(self, queries, k, pruner, nprobe, chunks,
                         out_i, out_d, solved):
@@ -1233,13 +1439,23 @@ class WmdEngine:
                             qp=sup_g.shape[0]), qcent=qcent)
         k_eff = min(k, seed_cand.size)
         neg, seed_pos = jax.lax.top_k(-lb[:qg], k_eff)
+        neg = np.asarray(neg)
         seed_pos = np.asarray(seed_pos)
         # -inf picks are non-candidates (a query with < k_eff candidates)
-        pos_seed = np.unique(seed_pos[np.isfinite(np.asarray(neg))])
+        pos_seed = np.unique(seed_pos[np.isfinite(neg)])
         pos_seed = pos_seed[pos_seed < seed_cand.size]
         if pos_seed.size == 0:
             return
         seed = sp[pos_seed]
+        scoped = self._scoped()
+        qmask_seed = None
+        if scoped:
+            # per-query seed membership: q's own finite top-k picks
+            qmask_seed = np.zeros((qg, seed.size), bool)
+            for g in range(qg):
+                own = seed_pos[g][np.isfinite(neg[g])]
+                own = own[own < seed_cand.size]
+                qmask_seed[g] = np.isin(seed, sp[own])
 
         # solve stage stays v_r-bucketed: per-chunk staging, reused for
         # the seed and survivor solves
@@ -1250,25 +1466,61 @@ class WmdEngine:
             sup, r, mask = self._prep_chunk(cq, width)
             prepped.append((chunk, cq, sup, r, mask, self._kq(sup, mask)))
 
-        def solve_all(doc_ids):       # -> (qg, |ids|) np, NaN-checked
+        def solve_all(doc_ids, qmask=None, stage="seed", warm=None,
+                      prof=None):
+            # -> ((qg, |ids|) np NaN-checked, per-chunk warm profiles)
             out = np.empty((qg, doc_ids.size), self.dtype)
+            profs = []
             # one gather, shared by chunks; survivor ids are cluster-sorted
             # storage ids, so this is a near-contiguous host slice
             grp = index.subset(doc_ids, storage=True)
-            for chunk, cq, sup, r, mask, kq in prepped:
-                w = np.asarray(self._solve_group(kq, r, mask, grp))
-                w = w[:len(chunk), :doc_ids.size]
+            n_pad = grp.docs.idx.shape[0]
+            for ci, (chunk, cq, sup, r, mask, kq) in enumerate(prepped):
+                rows = [row_of[qi] for qi in chunk]
+                qm = (None if qmask is None else self._pad_qdoc(
+                    qmask[rows], r.shape[0], n_pad))
+                pm = (None if prof is None else self._pad_qdoc(
+                    prof[rows], r.shape[0], n_pad))
+                w, xp = self._solve_group(
+                    kq, r, mask, grp, n_live=len(chunk), stage=stage,
+                    qdoc_mask=qm, x0q=None if warm is None else warm[ci],
+                    want_profile=True, prof_mask=pm)
+                profs.append(xp)
+                w = np.asarray(w)[:len(chunk), :doc_ids.size]
                 self._raise_if_nan(w, cq)
-                out[[row_of[qi] for qi in chunk]] = w
-            return out
+                out[rows] = w
+            return out, profs
 
-        d_seed = solve_all(seed)
+        # seed residual scope = the union of real seed docs (any of them
+        # can contend for any query once thresholds exist); own picks
+        # drive only the warm profile — see _prune_full
+        d_seed, xprofs = solve_all(seed, None, "seed", prof=qmask_seed)
         thresh = self._threshold(jnp.asarray(d_seed), k, seed.size)
         surv = pruner.survivors(index, sup_g, r_g, mask_g, cdists, pm,
                                 qcent, thresh, exclude=seed)
         cand = np.concatenate([seed, surv])
-        d_cand = (np.concatenate([d_seed, solve_all(surv)], axis=1)
-                  if surv.size else d_seed)
+        if surv.size:
+            qmask_surv = None
+            if scoped:
+                # per-query survivor membership: re-bound the FINAL
+                # survivor set with the cascade's tightest stage (one
+                # extra fused dispatch on the post-prune set) against
+                # each query's own threshold
+                from .prune import _pad_pow2_ids as _pp2
+                sps = _pp2(surv)
+                lbs = pruner.stage_bounds(
+                    pruner.stages[-1], index, sup_g, r_g, mask_g, sps,
+                    surv.size,
+                    pruner.id_qmask(index, pm, sps, surv.size,
+                                    qp=sup_g.shape[0]), qcent=qcent)
+                qmask_surv = (np.asarray(lbs[:qg, :surv.size])
+                              <= np.asarray(thresh)[:qg, None])
+            warm = (xprofs if (self.warm_start and self.tol is not None)
+                    else None)
+            d_surv, _ = solve_all(surv, qmask_surv, "survivor", warm=warm)
+            d_cand = np.concatenate([d_seed, d_surv], axis=1)
+        else:
+            d_cand = d_seed
         cand_ext = self._ext(cand)           # storage -> caller doc ids
         for g, qi in enumerate(live_q):
             order = np.argsort(d_cand[g], kind="stable")[:k]

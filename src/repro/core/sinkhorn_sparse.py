@@ -196,6 +196,25 @@ def marginal_residual(w, w_prev, mask):
     return jnp.max(diff / jnp.maximum(scale, 1e-30))
 
 
+def marginal_residual_per_query(w, w_prev, mask):
+    """Per-QUERY residual vector (ISSUE 5): the same statistic as
+    :func:`marginal_residual` — each DOC's diff is normalized by that
+    doc's own marginal scale (the last axis is the slot axis) BEFORE any
+    cross-doc reduction; mixing a near doc's diff with a far doc's much
+    larger marginal scale would release the exit spuriously early — but
+    reduced only over each query's own axes: ``w`` is (Q, ..., L) with a
+    leading query axis, and the doc-ratio max keeps it, returning (Q,).
+    ``mask`` is the per-query residual scope: fold the query's
+    *candidate* docs into it and far (query, doc) pairs the ranking
+    never needs can no longer hold that query's exit open. A query whose
+    scope is empty (an all-pad filler, or no candidates) reduces to
+    exactly 0 and converges at the first check."""
+    diff = jnp.max(jnp.where(mask, jnp.abs(w - w_prev), 0.0), axis=-1)
+    scale = jnp.max(jnp.where(mask, jnp.abs(w), 0.0), axis=-1)
+    ratio = diff / jnp.maximum(scale, 1e-30)
+    return jnp.max(ratio, axis=tuple(range(1, ratio.ndim)))
+
+
 def adaptive_loop(step, residual, x0, n_iter: int, tol: float,
                   check_every: int, all_reduce=None,
                   use_fori: bool = False):
@@ -240,6 +259,74 @@ def adaptive_loop(step, residual, x0, n_iter: int, tol: float,
     return x, iters
 
 
+def adaptive_loop_scoped(step, residual, x0, n_iter: int, tol: float,
+                         check_every: int, live_q, all_reduce=None):
+    """Per-QUERY convergence-adaptive driver (ISSUE 5).
+
+    Where :func:`adaptive_loop` reduces the exit statistic to one
+    chunk-global scalar, this driver keeps a (Q,) residual VECTOR and a
+    per-query convergence state:
+
+    - ``step(x, active) -> (x, w)`` runs one iteration with the (Q,) bool
+      ``active`` mask folded into the update — frozen queries' operand
+      rows are ZEROED (semantically dropped; a dense einsum/GEMM still
+      executes at full chunk width, so the saving is the earlier
+      per-query EXIT and the honest per-query iteration accounting, not
+      fewer FLOPs per remaining iteration — on TPU the Pallas path's
+      per-block exit is where frozen work is genuinely skipped);
+    - ``residual(w, w_prev) -> (Q,)`` is the per-query exit statistic
+      (:func:`marginal_residual_per_query` with the variant's own scope
+      mask — fold each query's CANDIDATE docs in and far pairs the
+      ranking never needs stop holding its exit open);
+    - queries FREEZE their x-columns once converged (``x`` keeps the
+      frozen value through every later window; convergence is sticky);
+    - the loop exits when every ``live_q`` query has converged or the
+      ``n_iter`` cap hits; ``all_reduce`` (the distributed ``lax.pmax``
+      over the (Q,) vector — still ONE collective) agrees on the
+      residuals across shards so every shard freezes the same queries.
+
+    The query axis is axis 0 of ``x``. The window is seeded with one real
+    iteration like the scalar driver, so per-query realized counts land
+    on ``1 + k*check_every`` with ``n_iter`` the cap. Returns
+    ``(x, iters_q)`` with ``iters_q`` (Q,) int32 — the iterations each
+    query's x actually absorbed (fillers stay at the seed count)."""
+    bshape = (-1,) + (1,) * (x0.ndim - 1)
+
+    def window(x, w, active):
+        act_b = active.reshape(bshape)
+
+        def inner(carry, _):
+            x, _ = carry
+            x_new, w_new = step(x, active)
+            return (jnp.where(act_b, x_new, x), w_new), None
+
+        (x, w), _ = lax.scan(inner, (x, w), None, length=check_every)
+        return x, w
+
+    def cond(state):
+        i, _, _, conv, _ = state
+        return (i < n_iter) & jnp.any(live_q & ~conv)
+
+    def body(state):
+        i, x, w_prev, conv, iters_q = state
+        active = live_q & ~conv
+        x, w = window(x, w_prev, active)
+        res = residual(w, w_prev)
+        if all_reduce is not None:
+            res = all_reduce(res)
+        i_new = i + check_every
+        iters_q = jnp.where(active, i_new, iters_q)
+        conv = conv | (active & (res <= tol))
+        return (i_new, x, w, conv, iters_q)
+
+    x, w_seed = step(x0, live_q)
+    q = live_q.shape[0]
+    state = (jnp.asarray(1, jnp.int32), x, w_seed,
+             jnp.zeros((q,), bool), jnp.ones((q,), jnp.int32))
+    _, x, _, _, iters_q = lax.while_loop(cond, body, state)
+    return x, iters_q
+
+
 def _inv(x, guarded: bool):
     """``1/x``; the guarded form maps non-positive entries to 0 instead of
     inf/NaN. The LINEAR path keeps the raw division on purpose — an
@@ -280,7 +367,8 @@ def _iterate(pre: SparsePrecompute, n_iter: int, gemm_dtype=None,
 
 
 def _iterate_adaptive(pre, n_iter: int, tol: float, check_every: int,
-                      gemm_dtype=None, guarded: bool = False):
+                      gemm_dtype=None, guarded: bool = False,
+                      doc_mask=None):
     """Convergence-adaptive Sinkhorn: a ``lax.while_loop`` that checks the
     doc-marginal residual ``max|val/t - w_prev|`` every ``check_every``
     iterations and exits once every live column is below ``tol``.
@@ -292,10 +380,14 @@ def _iterate_adaptive(pre, n_iter: int, tol: float, check_every: int,
     marginal scale and costs nothing extra: ``w`` falls out of the
     chunk's last inner iteration and is carried between checks. Padded
     slots (``val == 0``) are masked out of the residual, so inert docs
-    can neither stall the loop nor release it early.
-    Returns (x, iters)."""
+    can neither stall the loop nor release it early. ``doc_mask`` (N,)
+    additionally scopes the exit test to the docs the caller actually
+    needs (ISSUE 5's residual scoping from this single-query solver's
+    perspective): non-candidate docs keep iterating but cannot hold the
+    loop open. Returns (x, iters)."""
     v_r = pre.G.shape[0]
     live = pre.val > 0
+    resmask = live if doc_mask is None else live & doc_mask[:, None]
     x0 = jnp.full((v_r, pre.val.shape[0]), 1.0 / v_r, dtype=jnp.float32)
 
     def step(x):
@@ -304,7 +396,8 @@ def _iterate_adaptive(pre, n_iter: int, tol: float, check_every: int,
         w = _select(live, pre.val, t, guarded)
         return _spmm(pre.G_over_r, w, gemm_dtype), w
 
-    return adaptive_loop(step, lambda w, wp: marginal_residual(w, wp, live),
+    return adaptive_loop(step,
+                         lambda w, wp: marginal_residual(w, wp, resmask),
                          x0, n_iter, tol, check_every)
 
 
@@ -313,7 +406,8 @@ def _iterate_adaptive(pre, n_iter: int, tol: float, check_every: int,
 def _sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
                          docs: PaddedDocs, lam: float, n_iter: int,
                          tol=None, check_every: int = 4,
-                         precision: SolvePrecision = SolvePrecision()):
+                         precision: SolvePrecision = SolvePrecision(),
+                         doc_mask=None):
     gd = precision.gemm_dtype
     guarded = precision.log_domain
     if precision.log_domain:
@@ -324,7 +418,7 @@ def _sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
         x, iters = _iterate(pre, n_iter, gd, guarded)
     else:
         x, iters = _iterate_adaptive(pre, n_iter, tol, check_every, gd,
-                                     guarded)
+                                     guarded, doc_mask)
     u = _inv(x, guarded)
     t = _sddmm(pre.G, u, gd)
     w = _select(pre.val > 0, pre.val, t, guarded)
@@ -340,7 +434,7 @@ def sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
                         docs: PaddedDocs, lam: float, n_iter: int,
                         check_underflow: bool = True, tol=None,
                         check_every: int = 4, precision=None,
-                        return_iters: bool = False):
+                        return_iters: bool = False, doc_mask=None):
     """Sparse fused Sinkhorn WMD: identical result to the dense Alg. 1.
 
     Padding entries (val == 0) produce w == 0 and therefore contribute
@@ -352,6 +446,11 @@ def sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
     string spelling) selecting bf16 GEMMs and/or the log-domain kernel —
     the log-domain path cannot underflow, so the guard below never trips on
     it. ``return_iters=True`` also returns the realized iteration count.
+    ``doc_mask`` (N,) bool scopes the adaptive exit test to the caller's
+    candidate docs (ISSUE 5): this solver IS one query, so per-query
+    residual scoping means its residual covers only the docs whose
+    distances the caller will read — distances of masked-out docs are
+    still returned, just not allowed to delay the exit.
 
     Like the engine and ``one_to_many``, a ``K = exp(-lam*M)`` underflow
     raises :class:`~repro.core.sinkhorn.LamUnderflowError` with a host-side
@@ -363,7 +462,8 @@ def sinkhorn_wmd_sparse(r: jax.Array, vecs_sel: jax.Array, vecs: jax.Array,
     out, iters = _sinkhorn_wmd_sparse(
         r, vecs_sel, vecs, docs, lam, n_iter,
         tol=None if tol is None else float(tol),
-        check_every=int(check_every), precision=precision)
+        check_every=int(check_every), precision=precision,
+        doc_mask=None if doc_mask is None else jnp.asarray(doc_mask, bool))
     if (check_underflow and r.shape[0] > 0
             and bool(jnp.isnan(out).any())):
         raise LamUnderflowError(underflow_report(lam, vecs_sel, vecs, docs))

@@ -101,20 +101,27 @@ def sddmm_spmm_step(g, g_over_r, val, x, block_n: int = 128,
 def sinkhorn_fused_all(g, val, r, lam: float, n_iter: int, block_n: int = 128,
                        interpret: bool | None = None, tol=None,
                        check_every: int = 4, gemm: str = "fp32",
-                       log_domain: bool = False, with_iters: bool = False):
+                       log_domain: bool = False, resmask=None,
+                       with_iters: bool = False):
     """Fused solver with auto-padding; ``with_iters=True`` also returns the
     per-block realized iteration counts. ``log_domain`` pads query rows
     with -inf (a 0 would be a VALID log-K entry — distance 0 — and the
-    pad row would stop being inert)."""
+    pad row would stop being inert). ``resmask`` (N,) scopes each block's
+    adaptive exit test to the caller's candidate docs (pad docs are
+    masked out, matching the val padding)."""
     interpret = INTERPRET if interpret is None else interpret
     v_r, n, length = g.shape
     row_pad = -jnp.inf if log_domain else 0.0
     gp = pad_to(pad_to(pad_to(g, 2, 128), 1, block_n), 0, 8, value=row_pad)
     valp = pad_to(pad_to(val, 1, 128), 0, block_n)
     rp = pad_to(r, 0, 8, value=1.0)
+    rmp = None
+    if resmask is not None:
+        rmp = pad_to(jnp.asarray(resmask, gp.dtype), 0, block_n)
     wmd, iters = _sddmm_spmm.sinkhorn_fused_all(
         gp, valp, rp, lam, n_iter, block_n=block_n, interpret=interpret,
-        tol=tol, check_every=check_every, gemm=gemm, log_domain=log_domain)
+        tol=tol, check_every=check_every, gemm=gemm, log_domain=log_domain,
+        resmask=rmp)
     return (wmd[:n], iters) if with_iters else wmd[:n]
 
 
@@ -122,22 +129,29 @@ def sinkhorn_fused_all_batched(g, val, r, lam: float, n_iter: int,
                                block_n: int = 128,
                                interpret: bool | None = None, tol=None,
                                check_every: int = 4, gemm: str = "fp32",
-                               log_domain: bool = False,
+                               log_domain: bool = False, resmask=None,
                                with_iters: bool = False):
     """Batched fused solver with auto-padding. g (Q, v_r, N, L); val (N, L);
     r (Q, v_r) -> wmd (Q, N). Padded query rows carry r == 1, G == 0
     (G == -inf under ``log_domain`` — see :func:`sinkhorn_fused_all`).
     ``with_iters=True`` also returns the (Q, N-blocks) realized iteration
-    counts (per-block early exit under ``tol``)."""
+    counts (per-block early exit under ``tol``). ``resmask`` (Q, N)
+    scopes each query's exit test to its own candidate docs — each grid
+    block holds one query's rows, so the per-block exit is a
+    per-query-row freeze (ISSUE 5)."""
     interpret = INTERPRET if interpret is None else interpret
     q, v_r, n, length = g.shape
     row_pad = -jnp.inf if log_domain else 0.0
     gp = pad_to(pad_to(pad_to(g, 3, 128), 2, block_n), 1, 8, value=row_pad)
     valp = pad_to(pad_to(val, 1, 128), 0, block_n)
     rp = pad_to(r, 1, 8, value=1.0)
+    rmp = None
+    if resmask is not None:
+        rmp = pad_to(jnp.asarray(resmask, gp.dtype), 1, block_n)
     wmd, iters = _sddmm_spmm.sinkhorn_fused_all_batched(
         gp, valp, rp, lam, n_iter, block_n=block_n, interpret=interpret,
-        tol=tol, check_every=check_every, gemm=gemm, log_domain=log_domain)
+        tol=tol, check_every=check_every, gemm=gemm, log_domain=log_domain,
+        resmask=rmp)
     return (wmd[:, :n], iters) if with_iters else wmd[:, :n]
 
 

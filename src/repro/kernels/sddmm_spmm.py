@@ -96,7 +96,7 @@ def sddmm_spmm_step(g: jax.Array, g_over_r: jax.Array, val: jax.Array,
 
 def _solve_block(g, val, r, n_iter: int, lam: float, tol=None,
                  check_every: int = 4, gemm: str = "fp32",
-                 log_domain: bool = False):
+                 log_domain: bool = False, resmask=None):
     """Shared solver body: one (v_r, bn, L) G tile resident in VMEM.
 
     g (v_r, bn, L); val (bn, L); r (v_r, 1). Returns (wmd (bn,), iters).
@@ -110,6 +110,15 @@ def _solve_block(g, val, r, n_iter: int, lam: float, tol=None,
     and fp32 accumulation. ``log_domain=True`` takes ``g`` as
     UNexponentiated log K (pad rows -inf), column-stabilizes it in VMEM,
     and adds the exact shift correction to the distance line.
+
+    ``resmask`` (bn,) scopes the exit test to the CALLER'S candidate docs
+    (ISSUE 5's per-query residual scoping on the kernel path: in the
+    batched kernel each grid block holds exactly one query's rows, so a
+    block whose scope excludes its far docs exits — freezing that query's
+    rows — as soon as the docs the query actually needs are stationary).
+    Masked-out docs keep iterating while the block is live but cannot
+    hold its exit open; a block with an empty scope exits at the first
+    check like a pad block.
     """
     shift = None
     if log_domain:
@@ -148,12 +157,15 @@ def _solve_block(g, val, r, n_iter: int, lam: float, tol=None,
         w = val * _safe_inv(t) * live
         return _spmm(w), w
 
+    resm = live > 0
+    if resmask is not None:
+        resm = resm & (resmask > 0)[:, None]
     if tol is None:
         x = jax.lax.fori_loop(0, n_iter, lambda _, x: one(x)[0], x)
         iters = jnp.asarray(n_iter, jnp.int32)
     else:
         x, iters = adaptive_loop(
-            one, lambda w, wp: marginal_residual(w, wp, live > 0),
+            one, lambda w, wp: marginal_residual(w, wp, resm),
             x, n_iter, tol, check_every, use_fori=True)
 
     u = _safe_inv(x)
@@ -168,11 +180,17 @@ def _solve_block(g, val, r, n_iter: int, lam: float, tol=None,
     return wmd, iters
 
 
-def _fused_kernel(g_ref, val_ref, r_ref, wmd_ref, it_ref, *, n_iter: int,
+def _fused_kernel(g_ref, val_ref, r_ref, *refs, n_iter: int,
                   lam: float, tol, check_every: int, gemm: str,
-                  log_domain: bool):
+                  log_domain: bool, with_resmask: bool):
+    if with_resmask:
+        rm_ref, wmd_ref, it_ref = refs
+        rm = rm_ref[0]
+    else:
+        (wmd_ref, it_ref), rm = refs, None
     wmd, iters = _solve_block(g_ref[...], val_ref[...], r_ref[...], n_iter,
-                              lam, tol, check_every, gemm, log_domain)
+                              lam, tol, check_every, gemm, log_domain,
+                              resmask=rm)
     wmd_ref[...] = wmd[None, :]
     it_ref[...] = jnp.full((1, 1), iters, jnp.int32)
 
@@ -185,7 +203,7 @@ def sinkhorn_fused_all(g: jax.Array, val: jax.Array, r: jax.Array, lam: float,
                        n_iter: int, block_n: int = 128,
                        interpret: bool = False, tol=None,
                        check_every: int = 4, gemm: str = "fp32",
-                       log_domain: bool = False):
+                       log_domain: bool = False, resmask=None):
     """Whole Sinkhorn solve + WMD for all docs; one HBM pass over G.
 
     g: (v_r, N, L); val: (N, L); r: (v_r,) with padded rows == 1.0 and
@@ -194,32 +212,46 @@ def sinkhorn_fused_all(g: jax.Array, val: jax.Array, r: jax.Array, lam: float,
     reconstruct GM in VMEM). Returns (wmd (N,), iters (N // block_n,)) —
     realized iteration count per doc block (== ``n_iter`` for the fixed
     loop; see :func:`_solve_block` for the adaptive/precision knobs).
+    ``resmask`` (N,) float/bool scopes each block's adaptive exit to the
+    caller's candidate docs (ISSUE 5; ignored without ``tol``).
     """
     v_r, n, length = g.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)
+    with_resmask = resmask is not None and tol is not None
+    in_specs = [pl.BlockSpec((v_r, block_n, length), lambda i: (0, i, 0)),
+                pl.BlockSpec((block_n, length), lambda i: (i, 0)),
+                pl.BlockSpec((v_r, 1), lambda i: (0, 0))]
+    args = [g, val, r.reshape(-1, 1)]
+    if with_resmask:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i: (0, i)))
+        args.append(jnp.asarray(resmask, g.dtype).reshape(1, n))
     wmd, iters = pl.pallas_call(
         functools.partial(_fused_kernel, n_iter=n_iter, lam=lam, tol=tol,
                           check_every=check_every, gemm=gemm,
-                          log_domain=log_domain),
+                          log_domain=log_domain, with_resmask=with_resmask),
         grid=grid,
-        in_specs=[pl.BlockSpec((v_r, block_n, length), lambda i: (0, i, 0)),
-                  pl.BlockSpec((block_n, length), lambda i: (i, 0)),
-                  pl.BlockSpec((v_r, 1), lambda i: (0, 0))],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i)),
                    pl.BlockSpec((1, 1), lambda i: (0, i))],
         out_shape=[jax.ShapeDtypeStruct((1, n), g.dtype),
                    jax.ShapeDtypeStruct((1, n // block_n), jnp.int32)],
         interpret=interpret,
-    )(g, val, r.reshape(-1, 1))
+    )(*args)
     return wmd[0], iters[0]
 
 
-def _fused_batched_kernel(g_ref, val_ref, r_ref, wmd_ref, it_ref, *,
-                          n_iter: int, lam: float, tol, check_every: int,
-                          gemm: str, log_domain: bool):
+def _fused_batched_kernel(g_ref, val_ref, r_ref, *refs, n_iter: int,
+                          lam: float, tol, check_every: int,
+                          gemm: str, log_domain: bool, with_resmask: bool):
+    if with_resmask:
+        rm_ref, wmd_ref, it_ref = refs
+        rm = rm_ref[0]
+    else:
+        (wmd_ref, it_ref), rm = refs, None
     wmd, iters = _solve_block(g_ref[0], val_ref[...], r_ref[0], n_iter, lam,
-                              tol, check_every, gemm, log_domain)
+                              tol, check_every, gemm, log_domain,
+                              resmask=rm)
     wmd_ref[...] = wmd[None, :]
     it_ref[...] = jnp.full((1, 1), iters, jnp.int32)
 
@@ -232,7 +264,7 @@ def sinkhorn_fused_all_batched(g: jax.Array, val: jax.Array, r: jax.Array,
                                lam: float, n_iter: int, block_n: int = 128,
                                interpret: bool = False, tol=None,
                                check_every: int = 4, gemm: str = "fp32",
-                               log_domain: bool = False):
+                               log_domain: bool = False, resmask=None):
     """Batched solver: Q queries against one shared corpus in one launch.
 
     g: (Q, v_r, N, L) per-query gathered kernels (log K when
@@ -243,6 +275,12 @@ def sinkhorn_fused_all_batched(g: jax.Array, val: jax.Array, r: jax.Array,
     block EXITS independently (per-block early exit; inert pad blocks exit
     at the first residual check).
 
+    Per-query residual scoping (ISSUE 5): each grid block holds exactly
+    one query's rows, so the per-block exit IS a per-query-row freeze —
+    ``resmask`` (Q, N) narrows each query's exit test to its own
+    candidate docs, letting a block stop burning iterations on far docs
+    its ranking never reads (ignored without ``tol``).
+
     Grid is (Q, N // block_n): the doc axis varies fastest so each query's
     corpus sweep is contiguous; ``val`` blocks depend only on the doc index
     and are revisited per query (resident after the first pass on TPU).
@@ -250,18 +288,24 @@ def sinkhorn_fused_all_batched(g: jax.Array, val: jax.Array, r: jax.Array,
     q, v_r, n, length = g.shape
     assert n % block_n == 0, (n, block_n)
     grid = (q, n // block_n)
+    with_resmask = resmask is not None and tol is not None
+    in_specs = [pl.BlockSpec((1, v_r, block_n, length),
+                             lambda qi, i: (qi, 0, i, 0)),
+                pl.BlockSpec((block_n, length), lambda qi, i: (i, 0)),
+                pl.BlockSpec((1, v_r, 1), lambda qi, i: (qi, 0, 0))]
+    args = [g, val, r.reshape(q, v_r, 1)]
+    if with_resmask:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda qi, i: (qi, i)))
+        args.append(jnp.asarray(resmask, g.dtype))
     return pl.pallas_call(
         functools.partial(_fused_batched_kernel, n_iter=n_iter, lam=lam,
                           tol=tol, check_every=check_every, gemm=gemm,
-                          log_domain=log_domain),
+                          log_domain=log_domain, with_resmask=with_resmask),
         grid=grid,
-        in_specs=[pl.BlockSpec((1, v_r, block_n, length),
-                               lambda qi, i: (qi, 0, i, 0)),
-                  pl.BlockSpec((block_n, length), lambda qi, i: (i, 0)),
-                  pl.BlockSpec((1, v_r, 1), lambda qi, i: (qi, 0, 0))],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec((1, block_n), lambda qi, i: (qi, i)),
                    pl.BlockSpec((1, 1), lambda qi, i: (qi, i))],
         out_shape=[jax.ShapeDtypeStruct((q, n), g.dtype),
                    jax.ShapeDtypeStruct((q, n // block_n), jnp.int32)],
         interpret=interpret,
-    )(g, val, r.reshape(q, v_r, 1))
+    )(*args)

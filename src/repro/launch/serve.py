@@ -71,7 +71,8 @@ def serve_wmd(args) -> None:
                        impl=args.impl,
                        tol=args.tol if args.tol > 0 else None,
                        check_every=args.check_every,
-                       precision=args.precision)
+                       precision=args.precision, scope=args.scope,
+                       warm_start=args.warm_start)
     reqs = wmd_request_stream(corpus)
     bq = max(1, args.batch_queries)
     prune = None if args.prune == "none" else args.prune
@@ -109,8 +110,17 @@ def serve_wmd(args) -> None:
     iters = engine.iter_stats()
     if args.tol > 0 and iters.size:
         rec["tol"] = args.tol
+        rec["scope"] = args.scope
         rec["solve_iters_mean"] = round(float(iters.mean()), 1)
         rec["solve_iters_max"] = int(iters.max())
+        # per-stage realized counts (ISSUE 5): the warm-start win is the
+        # "survivor" series relative to the cold "seed" solves
+        by_stage = engine.iter_stats_by_stage()
+        for st, arr in by_stage.items():
+            if arr.size:
+                rec[f"solve_iters_{st}_mean"] = round(float(arr.mean()), 1)
+        if args.warm_start:
+            rec["warm_start"] = True
     if args.top_k > 0:
         rec["top_k"] = args.top_k
         rec["prune"] = args.prune
@@ -159,6 +169,18 @@ def main() -> None:
     ap.add_argument("--check-every", type=int, default=4,
                     help="adaptive solve: iterations between residual "
                          "checks")
+    ap.add_argument("--scope", default="query",
+                    choices=["chunk", "query"],
+                    help="adaptive-exit granularity: 'query' scopes each "
+                         "query's residual to its own candidate docs and "
+                         "freezes it on convergence (one stubborn query "
+                         "no longer stalls its chunkmates); 'chunk' keeps "
+                         "the chunk-global scalar exit")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="warm-start survivor solves from the seed "
+                         "solve's converged per-query profile (with "
+                         "--tol; sound when solves converge, see "
+                         "WmdEngine docs)")
     ap.add_argument("--n-docs", type=int, default=1024)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--embed-dim", type=int, default=64)

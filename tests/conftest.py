@@ -1,3 +1,5 @@
+import zlib
+
 import numpy as np
 import pytest
 
@@ -13,6 +15,17 @@ def small_corpus():
                        seed=7)
 
 
-@pytest.fixture(scope="session")
-def rng():
-    return np.random.default_rng(0)
+@pytest.fixture()
+def rng(request):
+    """Deterministic per-TEST generator (ISSUE 5 hygiene fix).
+
+    The old session-scoped generator was shared mutable state: each test
+    drew from wherever the previous consumer left the stream, so the
+    values any one test saw depended on which other tests ran before it
+    (``-k`` selections, ``-x`` aborts, and new tests all reshuffled the
+    draws — the ordering sensitivity behind the test_prune/test_ivf
+    dedup-corpus constructions). Seeding from the test's own nodeid makes
+    every test's stream a pure function of its name: stable under
+    insertion, selection, and reordering.
+    """
+    return np.random.default_rng(zlib.adler32(request.node.nodeid.encode()))

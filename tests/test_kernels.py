@@ -43,8 +43,13 @@ def test_cdist_exp_k_only_matches_full(rng):
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
 def test_cdist_exp_dtypes(rng, dtype):
-    if dtype == jnp.float64:
-        pytest.skip("x64 disabled globally; fp32 is the TPU target dtype")
+    # skip on the actual capability probe, not a hardcoded marker: a box
+    # running with JAX_ENABLE_X64=1 exercises the float64 path for real
+    # instead of silently skipping it (ISSUE 5 hygiene fix)
+    import jax
+    if dtype == jnp.float64 and not jax.config.jax_enable_x64:
+        pytest.skip("jax_enable_x64 is off on this box (fp32 is the TPU "
+                    "target dtype); enable JAX_ENABLE_X64=1 to run this")
     a, b = _rand(rng, 16, 128), _rand(rng, 256, 128)
     r = jnp.asarray(rng.uniform(0.1, 1.0, 16).astype(np.float32))
     m, k, kr = ops.cdist_exp(a.astype(dtype), b.astype(dtype),
