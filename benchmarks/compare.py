@@ -61,7 +61,8 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--prefixes",
         nargs="+",
-        default=["fig7", "fig8", "fig10.solve", "fig10.iters"],
+        default=["fig7", "fig8", "fig10.solve", "fig10.iters",
+                 "fig12.p50_low"],
         help="bench-name prefixes that gate (others are informational)",
     )
     args = ap.parse_args(argv)

@@ -966,6 +966,10 @@ class WmdEngine:
                  ``"bf16+log"``) — bf16 GEMMs with fp32 accumulation
                  (tolerance-bounded) and/or the log-domain kernel (exact;
                  makes :class:`LamUnderflowError` impossible at any lam).
+    iter_stats_maxlen: bound on the realized-iteration ring
+                 (:meth:`iter_stats`); overflow discards the OLDEST record
+                 and is counted by :attr:`iter_stats_dropped` so a
+                 long-running serve can tell a window from a full history.
     """
 
     def __init__(self, index: CorpusIndex, lam: float = 10.0,
@@ -975,7 +979,8 @@ class WmdEngine:
                  interpret: bool | None = None, dtype=jnp.float32,
                  prune_slack: float = 1e-3, tol: float | None = None,
                  check_every: int = 4, precision=None,
-                 scope: str = "query", warm_start: bool = False):
+                 scope: str = "query", warm_start: bool = False,
+                 iter_stats_maxlen: int = 4096):
         if impl not in ENGINE_IMPLS:
             raise ValueError(f"impl must be one of {ENGINE_IMPLS}, "
                              f"got {impl!r}")
@@ -999,15 +1004,31 @@ class WmdEngine:
         self.scope = scope
         self.warm_start = bool(warm_start)
         # bounded ring: a long-running service must not leak one device
-        # scalar per solve dispatch forever (reset_iter_stats() clears)
+        # scalar per solve dispatch forever (reset_iter_stats() clears).
+        # Saturation is OBSERVABLE (ISSUE 6): the ring silently discarding
+        # the oldest record under long-running serve looked like "stats
+        # cover everything" when they covered the last 4096 dispatches —
+        # iter_stats_dropped counts the discards and the serve JSON
+        # surfaces it.
         import collections
         self._iters_pending: collections.deque = collections.deque(
-            maxlen=4096)
+            maxlen=max(1, int(iter_stats_maxlen)))
+        self._iters_dropped = 0
 
     # -------------------------------------------------- realized iterations
     def reset_iter_stats(self) -> None:
-        """Drop the accumulated realized-iteration log."""
+        """Drop the accumulated realized-iteration log (and the
+        dropped-record counter)."""
         self._iters_pending.clear()
+        self._iters_dropped = 0
+
+    @property
+    def iter_stats_dropped(self) -> int:
+        """Dispatch records discarded by the bounded ring since the last
+        :meth:`reset_iter_stats` — nonzero means :meth:`iter_stats` is a
+        WINDOW over the most recent ``iter_stats_maxlen`` dispatches, not
+        the full history (long-running serve saturates it by design)."""
+        return self._iters_dropped
 
     def _record_iters(self, stage: str, iters, n_live: int | None) -> None:
         """Log one dispatch's realized counts (device values, synced
@@ -1015,6 +1036,8 @@ class WmdEngine:
         a per-query vector for ``scope="query"`` — ``n_live`` trims the
         vector to the chunk's real queries (fillers freeze at the first
         check and would pollute the histogram)."""
+        if len(self._iters_pending) == self._iters_pending.maxlen:
+            self._iters_dropped += 1    # ring full: oldest record discarded
         self._iters_pending.append((stage, iters, n_live))
 
     def iter_stats(self, stage: str | None = None) -> np.ndarray:

@@ -17,6 +17,17 @@ only the surviving candidates, rank):
         --top-k 10 --prune rwmd
     PYTHONPATH=src python -m repro.launch.serve --wmd --n-docs 8192 \
         --top-k 10 --prune ivf+wcd+rwmd --nprobe 8   # sub-O(Q*N) prune
+
+Async serving runtime (``--serve``, ISSUE 6): the long-lived front-end —
+deadline-or-full micro-batching, bounded-queue backpressure, tiered
+degradation under load, per-dispatch retry/watchdog, optional seeded
+fault injection. Drives an open-loop request stream at ``--rate`` qps and
+prints one JSON line per request plus a summary record:
+    PYTHONPATH=src python -m repro.launch.serve --wmd --serve \
+        --n-docs 2048 --top-k 10 --requests 64 --rate 50
+    PYTHONPATH=src python -m repro.launch.serve --wmd --serve \
+        --requests 64 --rate 200 --inject-transient-rate 0.2 \
+        --inject-poison-rate 0.05 --inject-seed 3     # chaos drill
 """
 from __future__ import annotations
 
@@ -58,6 +69,7 @@ def serve_lm(args) -> None:
 
 def serve_wmd(args) -> None:
     from repro.core import WmdEngine, build_index
+    from repro.core.sinkhorn import LamUnderflowError
     from repro.data.corpus import make_corpus
     from repro.data.pipeline import wmd_request_stream
     corpus = make_corpus(vocab_size=args.vocab, embed_dim=args.embed_dim,
@@ -77,24 +89,51 @@ def serve_wmd(args) -> None:
     bq = max(1, args.batch_queries)
     prune = None if args.prune == "none" else args.prune
     nprobe = args.nprobe if args.nprobe > 0 else None
-    times = []
-    solved = []
-    for i in range(args.steps):
-        batch = [next(reqs) for _ in range(bq)]
-        t0 = time.time()
+
+    def score(batch):
         if args.top_k > 0:
             res = engine.search(batch, args.top_k, prune=prune,
                                 nprobe=nprobe)
             jax.block_until_ready(res.distances)
-            solved.append(float(res.solved.mean()))
-            if i == 0:
-                print(f"query 0 -> top-3 docs {res.indices[0][:3].tolist()}")
-        else:
-            d = engine.query_batch(batch)
-            jax.block_until_ready(d)
-            if i == 0:
-                top = np.argsort(np.asarray(d[0]))[:3]
+            return res
+        d = engine.query_batch(batch)
+        jax.block_until_ready(d)
+        return d
+
+    times = []
+    solved = []
+    underflows = 0
+    for i in range(args.steps):
+        batch = [next(reqs) for _ in range(bq)]
+        t0 = time.time()
+        try:
+            out = score(batch)
+        except LamUnderflowError:
+            # per-request isolation (ISSUE 6 satellite): lam underflow is
+            # deterministic for the query that hit it — re-score one at a
+            # time so its batchmates still get answers, and emit the
+            # failing request's diagnostics as a structured JSON error
+            # instead of killing the server
+            out = None
+            for qi, q in enumerate(batch):
+                try:
+                    sub = score([q])
+                    out = sub if out is None else out
+                except LamUnderflowError as e:
+                    underflows += 1
+                    print(json.dumps({
+                        "step": i, "query": qi, "ok": False,
+                        "error": {"code": "lam_underflow",
+                                  "underflow_report": str(e)}}))
+        if i == 0 and out is not None:
+            if args.top_k > 0:
+                print(f"query 0 -> top-3 docs "
+                      f"{out.indices[0][:3].tolist()}")
+            else:
+                top = np.argsort(np.asarray(out[0]))[:3]
                 print(f"query 0 -> top-3 docs {top.tolist()}")
+        if args.top_k > 0 and out is not None:
+            solved.append(float(out.solved.mean()))
         times.append(time.time() - t0)
     times = np.asarray(times[1:]) * 1e3
     p50 = float(np.percentile(times, 50))   # median: late batches may still
@@ -106,7 +145,10 @@ def serve_wmd(args) -> None:
         "queries_per_s": round(bq / (p50 / 1e3), 1),
         "docs_per_s": round(bq * args.n_docs / (p50 / 1e3), 0),
         "precision": engine.precision.name,
+        "iter_stats_dropped": engine.iter_stats_dropped,
     }
+    if underflows:
+        rec["underflow_errors"] = underflows
     iters = engine.iter_stats()
     if args.tol > 0 and iters.size:
         rec["tol"] = args.tol
@@ -124,11 +166,82 @@ def serve_wmd(args) -> None:
     if args.top_k > 0:
         rec["top_k"] = args.top_k
         rec["prune"] = args.prune
-        rec["solved_frac"] = round(float(np.mean(solved)) / args.n_docs, 4)
+        if solved:
+            rec["solved_frac"] = round(float(np.mean(solved))
+                                       / args.n_docs, 4)
         if args.prune.startswith("ivf"):
             rec["n_clusters"] = index.clusters.n_clusters
             rec["nprobe"] = nprobe if nprobe else index.clusters.n_clusters
     print(json.dumps(rec))
+
+
+def serve_async(args) -> None:
+    """ISSUE 6 front-end: drive the long-lived :class:`ServingRuntime`
+    open-loop and print per-request JSON lines + a summary record."""
+    from repro.core import WmdEngine, build_index
+    from repro.data.corpus import make_corpus
+    from repro.data.pipeline import wmd_request_stream
+    from repro.runtime.serving import (FaultInjector, ServeConfig,
+                                       ServingRuntime, poisson_arrivals,
+                                       run_open_loop)
+    corpus = make_corpus(vocab_size=args.vocab, embed_dim=args.embed_dim,
+                         n_docs=args.n_docs, n_queries=8, seed=0)
+    index = build_index(corpus.docs, corpus.vecs,
+                        n_clusters=args.n_clusters)
+    engine = WmdEngine(index, lam=args.lam, n_iter=args.n_iter,
+                       impl=args.impl,
+                       tol=args.tol if args.tol > 0 else None,
+                       check_every=args.check_every,
+                       precision=args.precision, scope=args.scope,
+                       warm_start=args.warm_start)
+    injector = None
+    if args.inject_latency_rate or args.inject_transient_rate \
+            or args.inject_poison_rate:
+        injector = FaultInjector(
+            latency_rate=args.inject_latency_rate,
+            latency_s=args.inject_latency_ms / 1e3,
+            transient_rate=args.inject_transient_rate,
+            poison_rate=args.inject_poison_rate, seed=args.inject_seed)
+    cfg = ServeConfig(
+        max_batch=max(1, args.batch_queries),
+        window_s=args.window_ms / 1e3, max_queue=args.max_queue,
+        deadline_s=args.deadline_ms / 1e3 if args.deadline_ms > 0 else None,
+        prune="rwmd" if args.prune == "none" else args.prune,
+        nprobe=args.nprobe if args.nprobe > 0 else None)
+    runtime = ServingRuntime(engine, cfg, injector=injector)
+    # warm the compile caches OUTSIDE the measured stream: one dispatch per
+    # tier (first-request latency would otherwise be compile time)
+    reqs = wmd_request_stream(corpus)
+    warm = [next(reqs) for _ in range(2)]
+    for tier in runtime.tiers:
+        if tier.solve:
+            engine.search(warm, max(1, args.top_k), prune=cfg.prune,
+                          nprobe=tier.nprobe)
+        else:
+            from repro.runtime.serving import rwmd_topk
+            rwmd_topk(engine, warm, max(1, args.top_k))
+    engine.reset_iter_stats()
+    n = max(1, args.requests)
+    queries = [next(reqs) for _ in range(n)]
+    arrivals = poisson_arrivals(n, rate_per_s=args.rate, seed=1)
+    responses, stats = run_open_loop(runtime, queries, arrivals,
+                                     k=max(1, args.top_k))
+    for r in responses:
+        print(json.dumps(r.to_json()))
+    lat = np.asarray([r.queue_ms + r.service_ms for r in responses
+                      if r.ok])
+    span = float(arrivals[-1]) + max(
+        (r.service_ms for r in responses), default=0.0) / 1e3
+    print(json.dumps({
+        "workload": "wmd_serve", "impl": args.impl,
+        "n_docs": args.n_docs, "requests": n, "rate_qps": args.rate,
+        "latency_ms_p50": round(float(np.percentile(lat, 50)), 2)
+        if lat.size else None,
+        "latency_ms_p99": round(float(np.percentile(lat, 99)), 2)
+        if lat.size else None,
+        "throughput_qps": round(n / span, 1) if span > 0 else None,
+        "stats": stats,
+    }))
 
 
 def main() -> None:
@@ -181,6 +294,35 @@ def main() -> None:
                          "solve's converged per-query profile (with "
                          "--tol; sound when solves converge, see "
                          "WmdEngine docs)")
+    ap.add_argument("--serve", action="store_true",
+                    help="long-lived async serving runtime (ISSUE 6): "
+                         "deadline-or-full micro-batching, backpressure, "
+                         "tiered degradation, fault injection")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="--serve: open-loop request count")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="--serve: offered load (requests/s)")
+    ap.add_argument("--window-ms", type=float, default=10.0,
+                    help="--serve: coalescer deadline (a partial batch "
+                         "dispatches once its oldest member waited this)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="--serve: admission bound (queued + in flight); "
+                         "arrivals beyond it get structured rejections")
+    ap.add_argument("--deadline-ms", type=float, default=500.0,
+                    help="--serve: per-request deadline budget "
+                         "(0 = none); blown budgets degrade, not drop")
+    ap.add_argument("--inject-latency-rate", type=float, default=0.0,
+                    help="fault injection: per-attempt probability of "
+                         "added dispatch latency")
+    ap.add_argument("--inject-latency-ms", type=float, default=50.0)
+    ap.add_argument("--inject-transient-rate", type=float, default=0.0,
+                    help="fault injection: per-dispatch probability of a "
+                         "transient first-attempt failure (retried)")
+    ap.add_argument("--inject-poison-rate", type=float, default=0.0,
+                    help="fault injection: per-request probability of a "
+                         "poison request (isolated, structured error)")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="fault injection: deterministic replay seed")
     ap.add_argument("--n-docs", type=int, default=1024)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--embed-dim", type=int, default=64)
@@ -189,7 +331,9 @@ def main() -> None:
     ap.add_argument("--lam", type=float, default=1.0)
     ap.add_argument("--n-iter", type=int, default=15)
     args = ap.parse_args()
-    if args.wmd:
+    if args.serve:
+        serve_async(args)
+    elif args.wmd:
         serve_wmd(args)
     else:
         assert args.arch, "--arch required for LM serving"

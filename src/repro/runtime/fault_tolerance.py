@@ -6,13 +6,27 @@ route around stragglers, (c) restart on a DIFFERENT device count without
 manual intervention. The pieces:
 
 ``StepGuard``     — wraps the train step with retry-on-transient-failure and
-                    wall-time watchdog; classifies exceptions (preemption vs
-                    poison step) so a deterministic NaN doesn't retry forever.
+                    poison classification: a deterministic failure (NaN /
+                    non-finite output, assertion) raises ``PoisonStep``
+                    immediately instead of burning ``max_retries`` on a
+                    result that cannot change. Backoff is exponential with
+                    seeded jitter (a fleet of guards restarting in lockstep
+                    re-stampedes whatever fell over).
+``DispatchGuard`` — the serving-side extension (ISSUE 6): StepGuard's
+                    retry/backoff plus a wall-clock watchdog per dispatch
+                    (stragglers are counted and flagged, not silently
+                    absorbed into the latency tail), per-attempt hooks for
+                    fault injection, and poison-REQUEST classification —
+                    ``LamUnderflowError`` and ``PoisonStep`` subclasses are
+                    deterministic per-request failures the serving runtime
+                    isolates into structured error responses rather than
+                    retrying or letting them kill the coalesced batch.
 ``Heartbeat``     — per-host step-time EMA; quorum straggler detection (a
                     host slower than median * threshold for N consecutive
                     steps is flagged for eviction — on real fleets this feeds
                     the cluster scheduler; here it feeds logs + the elastic
-                    re-mesh hook).
+                    re-mesh hook). The serving runtime reuses the EMA lanes
+                    as per-TIER service-time estimates (``ema()``).
 ``elastic_mesh``  — mesh shapes as a function of the LIVE host count:
                     checkpoint save/restore is mesh-independent
                     (repro.checkpoint), so recovery is: detect -> rebuild
@@ -21,8 +35,12 @@ manual intervention. The pieces:
 from __future__ import annotations
 
 import math
+import random
 import time
 from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
 
 import jax
 
@@ -31,27 +49,141 @@ class PoisonStep(Exception):
     """Deterministic failure (NaN loss, assertion) — do NOT retry."""
 
 
+class DispatchFailed(Exception):
+    """Transient-failure retries exhausted for one dispatch.
+
+    Deliberately NOT a RuntimeError: outer guards classify RuntimeError as
+    transient-and-retryable, and a dispatch that already consumed its own
+    retry budget must not be retried again upstream."""
+
+
+def _nonfinite_leaves(out) -> list[str]:
+    """Names/indices of float pytree leaves with any non-finite entry.
+
+    Forces a device sync per float leaf — callers guarding large pytrees
+    (full parameter trees) should leave ``check_finite`` off and check a
+    cheap scalar themselves; serving dispatches return small host arrays
+    where the sync is free."""
+    bad = []
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(out)):
+        try:
+            arr = np.asarray(leaf)
+        except (TypeError, ValueError):
+            continue
+        if np.issubdtype(arr.dtype, np.floating) \
+                and not np.isfinite(arr).all():
+            bad.append(f"leaf[{i}]")
+    return bad
+
+
 @dataclass
 class StepGuard:
+    """Retry-on-transient-failure wrapper with poison classification.
+
+    ``check_finite=True`` additionally classifies a step whose OUTPUT
+    contains NaN/inf float leaves as :class:`PoisonStep` — a deterministic
+    NaN re-runs identically, so retrying it ``max_retries`` times only
+    delays the inevitable (and previously surfaced as a generic
+    ``RuntimeError`` after the full backoff schedule). Off by default:
+    the finite check syncs every float leaf (see :func:`_nonfinite_leaves`).
+
+    Backoff is ``backoff_s * 2**attempt * (1 + jitter * U[0,1))`` with the
+    uniform draw from a ``seed``-deterministic stream — reproducible in
+    tests, desynchronized across a fleet.
+    """
+
     max_retries: int = 3
     backoff_s: float = 1.0
+    jitter: float = 0.25
+    seed: int = 0
+    check_finite: bool = False
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+
+    def _sleep(self, attempt: int) -> None:
+        time.sleep(self.backoff_s * (2 ** attempt)
+                   * (1.0 + self.jitter * self._rng.random()))
 
     def run(self, step_fn, *args):
-        """Run step_fn; retry transient failures with backoff; re-raise
-        deterministic poison immediately."""
+        """Run step_fn; retry transient failures with jittered backoff;
+        re-raise deterministic poison immediately."""
         last = None
         for attempt in range(self.max_retries + 1):
             try:
                 out = step_fn(*args)
+                if self.check_finite:
+                    bad = _nonfinite_leaves(out)
+                    if bad:
+                        raise PoisonStep(
+                            f"non-finite step output ({', '.join(bad)}): "
+                            "deterministic failure, not retried")
                 return out
             except PoisonStep:
                 raise
             except (jax.errors.JaxRuntimeError, RuntimeError, OSError) as e:
                 last = e
                 if attempt < self.max_retries:
-                    time.sleep(self.backoff_s * (2 ** attempt))
+                    self._sleep(attempt)
         raise RuntimeError(
             f"step failed after {self.max_retries + 1} attempts") from last
+
+
+@dataclass
+class DispatchGuard(StepGuard):
+    """Serving dispatch guard (ISSUE 6): retry/timeout/backoff around ONE
+    engine dispatch.
+
+    Extends :class:`StepGuard` with:
+
+    - *poison-request classification*: ``PoisonStep`` subclasses AND
+      ``FloatingPointError`` (``repro.core.sinkhorn.LamUnderflowError``)
+      are deterministic per-request failures — re-raised immediately so
+      the serving runtime can fall back to per-request isolation and
+      return a structured error for the poisoned request while its
+      batchmates still get answers;
+    - *wall-clock watchdog*: a dispatch (successful or not) that exceeds
+      ``watchdog_s`` increments ``watchdog_trips`` — the runtime tags the
+      affected responses as straggler-served. Cooperative: a running XLA
+      dispatch cannot be preempted from Python, so the watchdog classifies
+      and accounts rather than kills (the bound it enforces is on the
+      RETRY budget: a straggling attempt still counts against it);
+    - *per-attempt hook* ``before_attempt(tag, attempt)``: the fault
+      injector's entry point (latency/transient injection runs inside the
+      guarded region so the retry path is exercised, not simulated).
+
+    Counters (``retries``, ``watchdog_trips``) accumulate across calls —
+    one guard instance per runtime, read by ``stats()``.
+    """
+
+    watchdog_s: float = 5.0
+    before_attempt: Callable | None = None
+    retries: int = field(default=0, init=False)
+    watchdog_trips: int = field(default=0, init=False)
+
+    def run(self, fn, *args, tag: int = 0):
+        last = None
+        for attempt in range(self.max_retries + 1):
+            t0 = time.monotonic()
+            try:
+                if self.before_attempt is not None:
+                    self.before_attempt(tag, attempt)
+                out = fn(*args)
+                if time.monotonic() - t0 > self.watchdog_s:
+                    self.watchdog_trips += 1
+                return out
+            except (PoisonStep, FloatingPointError):
+                raise          # deterministic: isolate, never retry
+            except (jax.errors.JaxRuntimeError, RuntimeError, OSError) as e:
+                last = e
+                if time.monotonic() - t0 > self.watchdog_s:
+                    self.watchdog_trips += 1
+                self.retries += 1
+                if attempt < self.max_retries:
+                    self._sleep(attempt)
+        raise DispatchFailed(
+            f"dispatch failed after {self.max_retries + 1} attempts "
+            f"({type(last).__name__}: {last})") from last
 
 
 @dataclass
@@ -69,6 +201,13 @@ class Heartbeat:
         prev = self._ema.get(host_id, step_time_s)
         self._ema[host_id] = (1 - self.ema_alpha) * prev \
             + self.ema_alpha * step_time_s
+
+    def ema(self, host_id: int) -> float | None:
+        """Current smoothed step time for one lane (``None`` before the
+        first record). The serving runtime keys lanes by degradation TIER
+        and reads this as the tier's expected service time when deciding
+        whether a request's remaining deadline budget still affords it."""
+        return self._ema.get(host_id)
 
     def stragglers(self) -> list[int]:
         if len(self._ema) < 2:

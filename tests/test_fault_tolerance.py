@@ -1,0 +1,143 @@
+"""Retry/poison/watchdog classification for the hardened guards
+(ISSUE 6): StepGuard's non-finite poisoning + jittered backoff, and
+DispatchGuard's watchdog, per-attempt hooks, and deterministic-failure
+classification."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sinkhorn import LamUnderflowError
+from repro.runtime.fault_tolerance import (DispatchFailed, DispatchGuard,
+                                           Heartbeat, PoisonStep, StepGuard)
+
+
+def test_stepguard_nonfinite_output_is_poison():
+    """check_finite classifies a NaN output as PoisonStep on the FIRST
+    attempt — a deterministic NaN re-runs identically, so retrying only
+    burns the backoff schedule (the pre-hardening behavior)."""
+    calls = {"n": 0}
+
+    def nan_step():
+        calls["n"] += 1
+        return {"loss": np.float32("nan"), "ok": np.ones(3)}
+
+    with pytest.raises(PoisonStep):
+        StepGuard(backoff_s=0.0, check_finite=True).run(nan_step)
+    assert calls["n"] == 1      # no retries burned on a deterministic NaN
+
+
+def test_stepguard_finite_output_passes():
+    out = StepGuard(backoff_s=0.0, check_finite=True).run(
+        lambda: {"loss": np.float32(1.5), "ids": np.arange(3)})
+    assert float(out["loss"]) == 1.5
+
+
+def test_stepguard_check_finite_off_by_default():
+    """Default guards must NOT pay the per-leaf device sync (train.py
+    wraps full parameter trees) — NaN outputs pass through un-poisoned."""
+    out = StepGuard(backoff_s=0.0).run(lambda: np.float32("nan"))
+    assert np.isnan(out)
+
+
+def test_stepguard_backoff_jittered_and_seeded(monkeypatch):
+    """Backoff sleeps follow base * 2^attempt * (1 + jitter*U[0,1)) from
+    a seed-deterministic stream: reproducible, never below the
+    exponential floor, never above the jitter ceiling."""
+    slept = []
+    monkeypatch.setattr(time, "sleep", slept.append)
+
+    def run_once():
+        slept.clear()
+        g = StepGuard(max_retries=3, backoff_s=0.1, jitter=0.5, seed=42)
+        with pytest.raises(RuntimeError):
+            g.run(lambda: (_ for _ in ()).throw(RuntimeError("transient")))
+        return list(slept)
+
+    a, b = run_once(), run_once()
+    assert a == b                       # seeded: identical schedules
+    assert len(a) == 3                  # sleeps between 4 attempts
+    for attempt, s in enumerate(a):
+        base = 0.1 * 2 ** attempt
+        assert base <= s <= base * 1.5, (attempt, s)
+    assert a[0] != a[1] / 2             # jitter actually applied
+
+
+def test_dispatchguard_poison_never_retried():
+    """PoisonStep subclasses AND FloatingPointError (LamUnderflowError)
+    are deterministic per-request failures: re-raised on attempt 0 so
+    the runtime can isolate, not retried."""
+    for exc in (PoisonStep("injected"), LamUnderflowError("lam too hot"),
+                FloatingPointError("underflow")):
+        calls = {"n": 0}
+
+        def bad():
+            calls["n"] += 1
+            raise exc
+
+        g = DispatchGuard(backoff_s=0.0)
+        with pytest.raises(type(exc)):
+            g.run(bad)
+        assert calls["n"] == 1, type(exc)
+        assert g.retries == 0
+
+
+def test_dispatchguard_transient_retried_to_success():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    g = DispatchGuard(backoff_s=0.0)
+    assert g.run(flaky) == "ok"
+    assert g.retries == 2
+
+
+def test_dispatchguard_exhaustion_is_dispatchfailed():
+    """Retries exhausted raises DispatchFailed — deliberately NOT a
+    RuntimeError, so an outer guard cannot re-classify it transient and
+    re-spend a second retry budget on the same dispatch."""
+    g = DispatchGuard(max_retries=2, backoff_s=0.0)
+    with pytest.raises(DispatchFailed) as ei:
+        g.run(lambda: (_ for _ in ()).throw(RuntimeError("down")))
+    assert not isinstance(ei.value, RuntimeError)
+    assert "3 attempts" in str(ei.value)
+    assert g.retries == 3
+
+
+def test_dispatchguard_watchdog_counts_stragglers():
+    g = DispatchGuard(watchdog_s=0.01, backoff_s=0.0)
+    g.run(lambda: time.sleep(0.03) or "slow")
+    assert g.watchdog_trips == 1
+    g.run(lambda: "fast")
+    assert g.watchdog_trips == 1        # fast dispatch: no trip
+
+
+def test_dispatchguard_before_attempt_hook_inside_guard():
+    """The injection hook runs INSIDE the guarded region: a hook that
+    raises a transient error consumes a retry, and the hook sees the
+    (tag, attempt) pair for each attempt."""
+    seen = []
+
+    def hook(tag, attempt):
+        seen.append((tag, attempt))
+        if attempt == 0:
+            raise RuntimeError("injected")
+
+    g = DispatchGuard(backoff_s=0.0, before_attempt=hook)
+    assert g.run(lambda: "ok", tag=5) == "ok"
+    assert seen == [(5, 0), (5, 1)]
+    assert g.retries == 1
+
+
+def test_heartbeat_ema_accessor():
+    hb = Heartbeat(ema_alpha=0.5)
+    assert hb.ema(0) is None            # no record yet
+    hb.record(0, 2.0)
+    assert hb.ema(0) == pytest.approx(2.0)
+    hb.record(0, 4.0)
+    assert hb.ema(0) == pytest.approx(3.0)
+    assert hb.ema(1) is None            # lanes are independent

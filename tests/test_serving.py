@@ -1,0 +1,319 @@
+"""Serving-runtime tests (ISSUE 6): coalescer deadline-or-full dispatch,
+backpressure, degradation-tier ordering, per-request poison isolation,
+lam-underflow structured errors, injector seed-determinism, and the
+RWMD degraded tier's admissibility.
+
+All async paths run through ``asyncio.run`` inside sync tests (no
+pytest-asyncio in the image). Timing assertions stay loose — this box is
+2 vCPUs and shared."""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.index import WmdEngine, build_index
+from repro.runtime.serving import (FaultInjector, ServeConfig, ServeRequest,
+                                   ServingRuntime, default_tiers,
+                                   poisson_arrivals, run_open_loop,
+                                   rwmd_topk)
+
+LAM = 1.0
+N_ITER = 10
+
+
+@pytest.fixture(scope="module")
+def engine(small_corpus):
+    index = build_index(small_corpus.docs, small_corpus.vecs)
+    return WmdEngine(index, lam=LAM, n_iter=N_ITER, impl="sparse")
+
+
+@pytest.fixture(scope="module")
+def queries(small_corpus):
+    return list(small_corpus.queries)
+
+
+def _cfg(**kw):
+    base = dict(max_batch=2, window_s=0.02, max_queue=64, deadline_s=None,
+                backoff_s=0.001, prune="ivf+wcd+rwmd")
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _serve(engine, reqs, cfg=None, injector=None, k=5, deadline_s=...):
+    """Submit all requests in one loop tick, gather every future."""
+    rt = ServingRuntime(engine, cfg or _cfg(), injector=injector)
+
+    async def go():
+        await rt.start()
+        futs = [rt.submit(q, k=k, deadline_s=deadline_s) for q in reqs]
+        out = await asyncio.gather(*futs)
+        await rt.stop()
+        return list(out)
+
+    return asyncio.run(go()), rt
+
+
+# ------------------------------------------------------------- coalescer
+def test_full_batch_dispatches_immediately(engine, queries):
+    """max_batch requests in one bucket dispatch WITHOUT waiting out the
+    window (the FULL half of deadline-or-full)."""
+    cfg = _cfg(max_batch=2, window_s=30.0)     # window absurdly long
+    t0 = time.monotonic()
+    resps, _ = _serve(engine, [queries[0], queries[0]], cfg)
+    assert time.monotonic() - t0 < 20.0        # did not wait the window
+    assert all(r.ok for r in resps)
+    assert {r.batch_size for r in resps} == {2}
+    assert resps[0].dispatch_id == resps[1].dispatch_id
+
+
+def test_partial_batch_flushes_at_window(engine, queries):
+    """A lone request dispatches once its window expires (the DEADLINE
+    half): latency stays bounded at low offered load."""
+    cfg = _cfg(max_batch=8, window_s=0.02)
+    resps, _ = _serve(engine, [queries[0]], cfg)
+    assert resps[0].ok and resps[0].batch_size == 1
+
+
+def test_buckets_never_share_a_dispatch(engine, queries):
+    """Distinct pow2 v_r buckets coalesce separately — one dispatch is
+    one compiled chunk shape."""
+    small = np.zeros_like(queries[0])
+    nz = np.flatnonzero(queries[0])[:3]
+    small[nz] = 1.0 / len(nz)                  # v_r=3 -> bucket 8
+    big = queries[1]                           # corpus query: v_r >> 8
+    assert int((big > 0).sum()) > 8
+    cfg = _cfg(max_batch=2, window_s=0.02)
+    resps, _ = _serve(engine, [small, big, small, big], cfg)
+    assert all(r.ok for r in resps)
+    assert resps[0].dispatch_id == resps[2].dispatch_id
+    assert resps[1].dispatch_id == resps[3].dispatch_id
+    assert resps[0].dispatch_id != resps[1].dispatch_id
+
+
+def test_empty_query_structured_error(engine, queries):
+    resps, _ = _serve(engine, [np.zeros_like(queries[0])])
+    assert not resps[0].ok
+    assert resps[0].error["code"] == "empty_query"
+
+
+# ----------------------------------------------------------- backpressure
+def test_backpressure_rejects_structured(engine, queries):
+    """Arrivals beyond max_queue get an immediate structured rejection
+    (no silent drop, no exception), and depth drains back to zero."""
+    cfg = _cfg(max_batch=1, window_s=0.001, max_queue=1)
+    resps, rt = _serve(engine, [queries[0]] * 4, cfg)
+    codes = [None if r.ok else r.error["code"] for r in resps]
+    assert codes[0] is None                    # first admitted
+    assert codes.count("rejected_overload") >= 1
+    assert "retry after" in next(r for r in resps if not r.ok
+                                 ).error["message"]
+    assert rt._depth == 0                      # drained after stop
+    assert rt.counters["rejected"] >= 1
+    assert rt.counters["submitted"] == 4
+
+
+# ------------------------------------------------------------ degradation
+def test_tier_ladder_shape(engine):
+    tiers = default_tiers(engine, "ivf+wcd+rwmd")
+    assert [t.name for t in tiers] == ["exact", "reduced_nprobe", "rwmd"]
+    assert tiers[0].nprobe is None and tiers[0].solve
+    assert tiers[1].nprobe < engine.index.clusters.n_clusters
+    assert not tiers[2].solve
+    # non-IVF prune: no nprobe knob, ladder skips the middle rung
+    assert [t.name for t in default_tiers(engine, "rwmd")] == \
+        ["exact", "rwmd"]
+    # caveats name their semantics (they ship in every response)
+    assert "exact" in tiers[0].caveat
+    assert "lower bound" in tiers[2].caveat
+
+
+def test_choose_tier_orders_by_queue_depth(engine):
+    """Deeper queue -> lower tier, monotonically (the load-shedding
+    watermarks), independent of deadlines."""
+    rt = ServingRuntime(engine, _cfg(max_queue=10,
+                                     degrade_depth=(0.5, 0.8)))
+    req = ServeRequest(rid=0, query=None, k=5, deadline=None,
+                       enqueue_t=0.0, v_r=4)
+    picks = []
+    for depth in (0, 4, 5, 7, 8, 9):
+        rt._depth = depth
+        picks.append(rt._choose_tier([req], now=0.0))
+    assert picks == sorted(picks)              # monotone degradation
+    assert picks[0] == 0                       # idle -> exact
+    assert picks[-1] == 2                      # saturated -> cheapest
+
+
+def test_blown_deadline_serves_cheapest_tier(engine, queries):
+    """A request whose budget is already spent degrades to the cheapest
+    tier instead of being dropped — and is tagged deadline_missed."""
+    resps, _ = _serve(engine, [queries[0]], deadline_s=0.0)
+    r = resps[0]
+    assert r.ok                                # degraded, NOT dropped
+    assert r.tier == "rwmd" and not r.exact
+    assert r.deadline_missed
+    assert "lower bound" in r.caveat
+
+
+def test_overload_engages_degradation(engine, queries):
+    """Open-loop overload: every request resolves and degraded tiers
+    absorb the excess (degrade-don't-drop end to end)."""
+    rt = ServingRuntime(engine, _cfg(max_batch=2, window_s=0.005,
+                                     max_queue=6, deadline_s=5.0,
+                                     degrade_depth=(0.3, 0.6)))
+    n = 16
+    reqs = [queries[i % len(queries)] for i in range(n)]
+    resps, stats = run_open_loop(rt, reqs, poisson_arrivals(
+        n, rate_per_s=500.0, seed=2), k=5)
+    assert len(resps) == n
+    assert all(r.ok or r.error is not None for r in resps)
+    served = [r for r in resps if r.ok]
+    assert any(r.tier != "exact" for r in served), stats["tiers"]
+    assert stats["degraded_frac"] > 0
+
+
+# ------------------------------------------------- fault injection paths
+def test_poison_isolated_batchmates_answered(engine, queries):
+    """A poisoned request inside a coalesced batch gets a structured
+    error; its batchmates still get ranked results (per-request
+    isolation, the satellite-(a) contract)."""
+    probe = FaultInjector(poison_rate=0.3, seed=18)
+    rids = list(range(4))
+    poisoned = {r for r in rids if probe.poison(r)}
+    assert poisoned and set(rids) - poisoned   # seed chosen: mixed batch
+    inj = FaultInjector(poison_rate=0.3, seed=18)
+    cfg = _cfg(max_batch=4, window_s=0.02)
+    resps, rt = _serve(engine, [queries[0]] * 4, cfg, injector=inj)
+    for r in resps:
+        if r.rid in poisoned:
+            assert not r.ok and r.error["code"] == "poison"
+        else:
+            assert r.ok and len(r.indices) == 5
+    assert rt.counters["isolations"] >= 1
+
+
+def test_lam_underflow_structured_diagnostics(small_corpus, queries):
+    """A lam that underflows fp32 K yields per-request lam_underflow
+    errors with the underflow_report diagnostics attached — the server
+    answers, it does not crash (and precision='log' is the documented
+    fix, so the message must say so)."""
+    index = build_index(small_corpus.docs, small_corpus.vecs)
+    hot = WmdEngine(index, lam=50.0, n_iter=5, impl="sparse")
+    resps, _ = _serve(hot, [queries[0], queries[1]])
+    for r in resps:
+        assert not r.ok
+        assert r.error["code"] == "lam_underflow"
+        assert "precision" in r.error["message"]
+        assert r.error["diagnostics"]          # underflow_report text
+
+
+def test_transient_faults_retried_to_success(engine, queries):
+    """transient_attempts=1 (default): only first attempts can fault, so
+    the retry path recovers every dispatch."""
+    inj = FaultInjector(transient_rate=1.0, seed=3)
+    resps, rt = _serve(engine, [queries[0]], injector=inj)
+    assert resps[0].ok
+    assert rt.guard.retries >= 1
+    assert ("transient", 0, 0) in inj.trace
+
+
+def test_retry_exhaustion_structured_error(engine, queries):
+    """Faults on EVERY attempt exhaust the budget into a structured
+    retries_exhausted error — never an unhandled exception."""
+    inj = FaultInjector(transient_rate=1.0, transient_attempts=99, seed=3)
+    cfg = _cfg(max_retries=1)
+    resps, rt = _serve(engine, [queries[0]], cfg, injector=inj)
+    assert not resps[0].ok
+    assert resps[0].error["code"] == "retries_exhausted"
+    assert "2 attempts" in resps[0].error["message"]
+
+
+def test_injector_replays_identically_from_seed(engine, queries):
+    """The chaos layer is deterministic: same seed -> identical decision
+    trace and identical per-request outcomes; a different seed diverges
+    somewhere (rates chosen to make that overwhelming)."""
+    def drill(seed):
+        inj = FaultInjector(latency_rate=0.3, latency_s=0.001,
+                            transient_rate=0.5, poison_rate=0.3,
+                            seed=seed)
+        resps, _ = _serve(engine, [queries[i % 3] for i in range(6)],
+                          _cfg(max_batch=2), injector=inj)
+        outcome = [(r.rid, r.ok, None if r.ok else r.error["code"])
+                   for r in resps]
+        return sorted(inj.trace), outcome
+
+    t1, o1 = drill(5)
+    t2, o2 = drill(5)
+    assert t1 == t2 and o1 == o2
+    t3, _ = drill(6)
+    assert t1 != t3
+
+
+def test_injector_draws_order_independent():
+    """Injection decisions are pure functions of (seed, site) — calling
+    order cannot change them (the property the replay test rests on)."""
+    a = FaultInjector(poison_rate=0.5, seed=9)
+    fwd = [a.poison(r) for r in range(8)]
+    b = FaultInjector(poison_rate=0.5, seed=9)
+    rev = [b.poison(r) for r in reversed(range(8))]
+    assert fwd == rev[::-1]
+
+
+# ------------------------------------------------------- degraded scoring
+def test_rwmd_topk_admissible_and_shaped(engine, queries):
+    """The degraded tier's reported values are true lower bounds on the
+    engine's exact WMD (LC-RWMD admissibility), shaped like search()."""
+    k = 8
+    idx, bounds = rwmd_topk(engine, queries, k)
+    assert idx.shape == (len(queries), k) == bounds.shape
+    exact = np.asarray(engine.query_batch(queries))
+    for qi in range(len(queries)):
+        assert bounds[qi, 0] <= bounds[qi, -1] + 1e-6   # sorted ascending
+        for j in range(k):
+            assert bounds[qi, j] <= exact[qi, idx[qi, j]] + 1e-4
+
+
+def test_rwmd_tier_response_tagged_not_exact(engine, queries):
+    rt = ServingRuntime(engine, _cfg())
+    tiers = rt.tiers
+
+    async def go():
+        await rt.start()
+        f = rt.submit(queries[0], k=5, deadline_s=0.0)  # -> cheapest
+        out = await f
+        await rt.stop()
+        return out
+
+    r = asyncio.run(go())
+    assert r.tier == tiers[-1].name and not r.exact
+    j = r.to_json()
+    assert j["tier"] == "rwmd" and j["exact"] is False
+    assert "caveat" in j
+
+
+# --------------------------------------------------------- observability
+def test_iter_stats_ring_drop_counter(small_corpus, queries):
+    """A saturated iteration-stats ring counts what it discards instead
+    of silently windowing (the satellite-(c) observable)."""
+    index = build_index(small_corpus.docs, small_corpus.vecs)
+    eng = WmdEngine(index, lam=LAM, n_iter=5, impl="sparse",
+                    iter_stats_maxlen=2)
+    assert eng.iter_stats_dropped == 0
+    eng.query_batch(queries)        # 4 doc groups -> > 2 records
+    assert eng.iter_stats_dropped > 0
+    eng.reset_iter_stats()
+    assert eng.iter_stats_dropped == 0
+
+
+def test_responses_carry_observability(engine, queries):
+    resps, rt = _serve(engine, [queries[0], queries[0]],
+                       _cfg(max_batch=2))
+    r = resps[0]
+    assert r.ok and r.service_ms > 0 and r.batch_size == 2
+    assert r.solve_iters            # per-stage realized iterations
+    stats = rt.stats()
+    for key in ("dispatches", "retries", "watchdog_trips",
+                "iter_stats_dropped", "degraded_frac", "tier_ema_s"):
+        assert key in stats
+    assert stats["dispatches"] >= 1
+    assert stats["tier_ema_s"]      # EMA recorded for the served tier
