@@ -62,7 +62,7 @@ def main(argv=None) -> int:
         "--prefixes",
         nargs="+",
         default=["fig7", "fig8", "fig10.solve", "fig10.iters",
-                 "fig12.p50_low"],
+                 "fig11.wall", "fig12.p50_low"],
         help="bench-name prefixes that gate (others are informational)",
     )
     args = ap.parse_args(argv)

@@ -13,8 +13,9 @@ import sys
 import traceback
 
 from . import (fig5_scaling, fig6_multi_query, fig7_cdist, fig8_topk_prune,
-               fig9_ivf_prune, fig10_solve_adaptive, fig12_serving,
-               moe_router, python_baseline, roofline, table1_profile)
+               fig9_ivf_prune, fig10_solve_adaptive, fig11_sharded,
+               fig12_serving, moe_router, python_baseline, roofline,
+               table1_profile)
 
 MODULES = [
     ("table1_profile", table1_profile),
@@ -25,6 +26,7 @@ MODULES = [
     ("fig8_topk_prune", fig8_topk_prune),
     ("fig9_ivf_prune", fig9_ivf_prune),
     ("fig10_solve_adaptive", fig10_solve_adaptive),
+    ("fig11_sharded", fig11_sharded),
     ("fig12_serving", fig12_serving),
     ("moe_router", moe_router),
     ("roofline", roofline),

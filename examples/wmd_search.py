@@ -66,11 +66,21 @@ def main() -> None:
     ap.add_argument("--warm-start", action="store_true",
                     help="warm-start survivor solves from the seed "
                          "solve's converged profile (with --tol)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="> 1: cluster-aligned doc shards over a device "
+                         "mesh (host-platform CPU devices are forced when "
+                         "no accelerators exist); per-shard cascades, one "
+                         "top-k merge collective")
     ap.add_argument("--batches", type=int, default=4,
                     help="timed engine passes over the query set")
     ap.add_argument("--looped", action="store_true",
                     help="seed per-query loop instead of the staged engine")
     args = ap.parse_args()
+
+    if args.shards > 1:
+        # must precede the first jax array op / device query below
+        from repro.runtime.sharding import ensure_host_devices
+        ensure_host_devices(args.shards)
 
     corpus = make_corpus(vocab_size=args.vocab, embed_dim=64,
                          n_docs=args.n_docs, n_queries=args.queries, seed=7)
@@ -101,14 +111,23 @@ def main() -> None:
     else:
         prune = None if args.prune == "none" else args.prune
         nprobe = args.nprobe if args.nprobe > 0 else None
-        index = build_index(corpus.docs, corpus.vecs,
-                            n_clusters=args.n_clusters)   # frozen once;
-        # 'auto'/numeric strings parsed by build_index itself
-        engine = WmdEngine(index, lam=LAM, n_iter=15, impl=args.impl,
-                           tol=args.tol if args.tol > 0 else None,
-                           check_every=args.check_every,
-                           precision=args.precision, scope=args.scope,
-                           warm_start=args.warm_start)
+        kw = dict(lam=LAM, n_iter=15, impl=args.impl,
+                  tol=args.tol if args.tol > 0 else None,
+                  check_every=args.check_every, precision=args.precision,
+                  scope=args.scope, warm_start=args.warm_start)
+        if args.shards > 1:
+            from repro.core import ShardedWmdEngine, shard_corpus
+            sindex = shard_corpus(corpus.docs, corpus.vecs, args.shards,
+                                  n_clusters=args.n_clusters)
+            engine = ShardedWmdEngine(sindex, **kw)
+            print(f"sharded: {engine.n_shards} cluster-aligned shards, "
+                  f"docs/shard {list(engine.docs_per_shard)}, "
+                  f"clusters/shard {list(engine.cluster_counts)}")
+        else:
+            index = build_index(corpus.docs, corpus.vecs,
+                                n_clusters=args.n_clusters)  # frozen once;
+            # 'auto'/numeric strings parsed by build_index itself
+            engine = WmdEngine(index, **kw)
         res = engine.search(queries, args.topk, prune=prune,
                             nprobe=nprobe)                # compile pass
         batch_ms = []

@@ -14,6 +14,9 @@ from .sinkhorn_sparse import (SolvePrecision, precompute_sparse,
 from .sparse import (BlockSparse, PaddedDocs, block_density,
                      block_sparse_from_dense, padded_docs_from_dense,
                      padded_docs_from_lists, padded_docs_to_dense)
+from .shard_index import (ShardedCorpusIndex, ShardedWmdEngine,
+                          append_docs_sharded, bin_pack_clusters,
+                          count_collectives, shard_corpus)
 from .wmd import IMPLS, many_to_many, one_to_many, search
 from .router import route, sinkhorn_route, topk_route
 
@@ -30,5 +33,7 @@ __all__ = [
     "BlockSparse", "PaddedDocs", "block_density", "block_sparse_from_dense",
     "padded_docs_from_dense", "padded_docs_from_lists",
     "padded_docs_to_dense", "IMPLS", "many_to_many", "one_to_many", "search",
+    "ShardedCorpusIndex", "ShardedWmdEngine", "append_docs_sharded",
+    "bin_pack_clusters", "count_collectives", "shard_corpus",
     "route", "sinkhorn_route", "topk_route",
 ]

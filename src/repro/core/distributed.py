@@ -101,17 +101,47 @@ def sinkhorn_wmd_dense_distributed(r, vecs_sel, vecs, c, lam: float,
 # sparse distributed (production path)
 # --------------------------------------------------------------------------
 
-def _check_underflow(out, lam, vecs_sel, vecs, docs):
+def _check_underflow(out, lam, vecs_sel, vecs, docs, mesh: Mesh = None,
+                     doc_ids=None):
     """Host-side lam-hygiene guard shared by the distributed solvers: a K
     underflow poisons every affected shard's distances with NaN — raise the
     same diagnosed :class:`LamUnderflowError` the engine raises instead of
     returning (and all-reducing) NaN. Batched (Q, v_r, w) support stacks
-    are flattened for the report (it diagnoses per support word)."""
+    are flattened for the report (it diagnoses per support word).
+
+    With ``mesh`` the report names the OWNING SHARD(S) of the poisoned
+    doc positions (docs are dealt to shards in contiguous mesh-order
+    blocks, so ownership is position // block), and with ``doc_ids`` it
+    quotes EXTERNAL doc ids instead of storage positions — a poisoned
+    request's diagnosis stays actionable on the sharded path, mirroring
+    the batched-path fix (storage positions are meaningless to callers
+    once the cluster-major permutation and the shard deal are applied).
+    """
     import numpy as np
 
     if vecs_sel.shape[0] > 0 and np.isnan(np.asarray(out)).any():
         sel2 = jnp.reshape(vecs_sel, (-1, vecs_sel.shape[-1]))
-        raise LamUnderflowError(underflow_report(lam, sel2, vecs, docs))
+        msg = underflow_report(lam, sel2, vecs, docs)
+        out_np = np.asarray(out)
+        nan_docs = np.nonzero(
+            np.isnan(out_np).any(axis=0) if out_np.ndim == 2
+            else np.isnan(out_np))[0]
+        if nan_docs.size:
+            ids = (np.asarray(doc_ids)[nan_docs] if doc_ids is not None
+                   else nan_docs)
+            shown = ids[:8].tolist()
+            tail = ", ..." if ids.size > 8 else ""
+            kind = "external doc ids" if doc_ids is not None \
+                else "doc positions"
+            where = f"{nan_docs.size} poisoned docs ({kind} {shown}{tail})"
+            if mesh is not None:
+                n_shards = int(mesh.devices.size)
+                block = max(1, out_np.shape[-1] // n_shards)
+                owners = sorted({int(d // block) for d in nan_docs})
+                where = (f"owning shard(s) {owners} of {n_shards} on mesh "
+                         f"{dict(mesh.shape)}; " + where)
+            msg = f"{where} — {msg}"
+        raise LamUnderflowError(msg)
     return out
 
 
@@ -122,7 +152,8 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
                                     tol: float | None = None,
                                     check_every: int = 4,
                                     qmask=None,
-                                    return_iters: bool = False):
+                                    return_iters: bool = False,
+                                    doc_ids=None):
     """ELL fused Sinkhorn with docs sharded over every mesh axis.
 
     ``vshard_precompute=False``: baseline — every chip computes the full
@@ -162,6 +193,11 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     overshooting the cap by at most ``check_every - 1``).
     ``return_iters=True`` also returns the per-query realized counts
     ((Q,) int32; scalar-shaped (1,) for a single query).
+
+    ``doc_ids`` (N,) optionally names each doc position's EXTERNAL id in
+    the underflow diagnosis (see :func:`_check_underflow`) — callers that
+    permuted or shard-dealt storage should pass it so a poisoned
+    request's report quotes ids the caller can act on.
     """
     doc_axes = _doc_axes(mesh)
     docs_spec = P(doc_axes)
@@ -174,7 +210,8 @@ def sinkhorn_wmd_sparse_distributed(r, vecs_sel, vecs, docs: PaddedDocs,
     def finish(out_iters):
         out, iters = out_iters
         if check_underflow:
-            _check_underflow(out, lam, vecs_sel, vecs, docs)
+            _check_underflow(out, lam, vecs_sel, vecs, docs, mesh=mesh,
+                             doc_ids=doc_ids)
         return (out, iters) if return_iters else out
 
     if not vshard_precompute:

@@ -409,7 +409,8 @@ def _doc_centroids(idx_np, val_np, vecs_np, chunk: int = 2048):
 
 def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
                 doc_groups: int = 4, n_clusters=None,
-                ivf_iters: int = 10, ivf_seed: int = 0) -> CorpusIndex:
+                ivf_iters: int = 10, ivf_seed: int = 0,
+                clusters=None) -> CorpusIndex:
     """Freeze the corpus side: device-resident docs + embeddings + norms +
     per-doc centroids (the WCD prune stage's corpus half) + the IVF coarse
     quantizer over those centroids (the cascade's shortlist stage).
@@ -432,12 +433,36 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
     statistic instead (dedup-style corpora want far more than sqrt(N)).
     Clustering runs mini-batch Lloyd on device and is frozen afterwards
     (:func:`append_docs` only assigns).
+
+    ``clusters=(centers, assign)`` skips the k-means entirely and freezes
+    the given quantizer instead: ``centers`` is a (C, w) array, ``assign``
+    a host (N,) cluster id per doc. This is the sharded-index hook
+    (:func:`repro.core.shard_index.shard_corpus` runs ONE global k-means,
+    then builds each shard's :class:`CorpusIndex` over its owned clusters
+    with locally relabeled ids) — membership, radii, and the cluster-major
+    permutation are still derived here, so every downstream invariant
+    holds unchanged.
     """
     vecs = jnp.asarray(vecs, dtype)
     vecs_np = np.asarray(vecs)
     idx_np, val_np = _compact_slots(docs, dtype)
     n_docs = idx_np.shape[0]
     centroids_np = _doc_centroids(idx_np, val_np, vecs_np)
+    if clusters is not None:
+        pre_centers, pre_assign = clusters
+        centers = jnp.asarray(pre_centers, dtype)
+        assign = np.asarray(pre_assign, np.int32)
+        n_clusters = int(centers.shape[0])
+        if assign.shape[0] != n_docs:
+            raise ValueError(f"precomputed assign has {assign.shape[0]} "
+                             f"entries for {n_docs} docs")
+        if assign.size and (assign.min() < 0
+                            or assign.max() >= n_clusters):
+            raise ValueError("precomputed assign references cluster ids "
+                             f"outside [0, {n_clusters})")
+        return _assemble_index(idx_np, val_np, centroids_np, vecs,
+                               centers, assign, n_clusters, doc_groups,
+                               dtype)
     if isinstance(n_clusters, str):
         if n_clusters == "auto":
             n_clusters = auto_n_clusters(centroids_np, seed=ivf_seed)
@@ -455,7 +480,15 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
     else:
         centers = jnp.zeros((n_clusters, vecs.shape[1]), dtype)
         assign = np.zeros((0,), np.int32)
+    return _assemble_index(idx_np, val_np, centroids_np, vecs, centers,
+                           assign, n_clusters, doc_groups, dtype)
 
+
+def _assemble_index(idx_np, val_np, centroids_np, vecs, centers, assign,
+                    n_clusters: int, doc_groups: int, dtype) -> CorpusIndex:
+    """Shared :func:`build_index` tail: cluster-major permutation, nnz
+    grouping, membership/radii, device upload. Split out so the sharded
+    builder can reuse it with a precomputed (frozen) quantizer."""
     # cluster-major storage: permute every per-doc array so assign is
     # non-decreasing; ext_ids/remap translate at the output boundary
     perm = np.argsort(assign, kind="stable").astype(np.int32)

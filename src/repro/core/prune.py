@@ -347,6 +347,18 @@ class CascadePruner:
     top-k of the query's own probed universe, plus any batch-mates' union
     candidates that rank better, which can only raise recall).
 
+    Sharded serving (:class:`~repro.core.shard_index.ShardedWmdEngine`)
+    runs one cascade PER SHARD over that shard's own clusters, so
+    ``nprobe`` is a per-shard knob: each shard probes its ``nprobe``
+    nearest owned clusters (clamped to the shard's cluster count by the
+    ``np_eff`` clamp in :meth:`probe`), and a doc is reachable iff its
+    cluster ranks among its OWNING shard's probes. ``nprobe=None``
+    therefore stays globally exact (every shard probes everything and
+    the merge is a true global top-k), and the recall-vs-``nprobe``
+    monotonicity above holds per shard count — but the probed universes
+    at a fixed finite ``nprobe`` differ between shard counts (S shards
+    probe up to ``S * nprobe`` clusters globally, drawn shard-locally).
+
     The driver is :meth:`WmdEngine.search <repro.core.index.WmdEngine>`;
     this class owns the stage computations.
     """

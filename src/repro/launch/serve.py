@@ -67,24 +67,40 @@ def serve_lm(args) -> None:
     }))
 
 
-def serve_wmd(args) -> None:
+def _build_wmd_engine(args, corpus):
+    """Engine construction shared by serve_wmd/serve_async: the
+    single-device engine by default; with ``--shards N`` the corpus is
+    partitioned cluster-aligned over an N-device mesh. ``main()`` forces
+    host-platform devices right after argparse (before the first jax
+    array op); the ``ensure_host_devices`` here re-validates the count
+    for callers that enter below ``main()``."""
+    kw = dict(lam=args.lam, n_iter=args.n_iter, impl=args.impl,
+              tol=args.tol if args.tol > 0 else None,
+              check_every=args.check_every, precision=args.precision,
+              scope=args.scope, warm_start=args.warm_start)
+    if args.shards > 1:
+        from repro.core import ShardedWmdEngine, shard_corpus
+        from repro.runtime.sharding import ensure_host_devices
+        ensure_host_devices(args.shards)
+        sindex = shard_corpus(corpus.docs, corpus.vecs, args.shards,
+                              n_clusters=args.n_clusters)
+        return ShardedWmdEngine(sindex, **kw)
     from repro.core import WmdEngine, build_index
-    from repro.core.sinkhorn import LamUnderflowError
-    from repro.data.corpus import make_corpus
-    from repro.data.pipeline import wmd_request_stream
-    corpus = make_corpus(vocab_size=args.vocab, embed_dim=args.embed_dim,
-                         n_docs=args.n_docs, n_queries=8, seed=0)
     # corpus side frozen ONCE; every request after this touches only its
     # own (v_r, ...) slice of work ('auto'/numeric strings parsed by
     # build_index itself)
     index = build_index(corpus.docs, corpus.vecs,
                         n_clusters=args.n_clusters)
-    engine = WmdEngine(index, lam=args.lam, n_iter=args.n_iter,
-                       impl=args.impl,
-                       tol=args.tol if args.tol > 0 else None,
-                       check_every=args.check_every,
-                       precision=args.precision, scope=args.scope,
-                       warm_start=args.warm_start)
+    return WmdEngine(index, **kw)
+
+
+def serve_wmd(args) -> None:
+    from repro.core.sinkhorn import LamUnderflowError
+    from repro.data.corpus import make_corpus
+    from repro.data.pipeline import wmd_request_stream
+    corpus = make_corpus(vocab_size=args.vocab, embed_dim=args.embed_dim,
+                         n_docs=args.n_docs, n_queries=8, seed=0)
+    engine = _build_wmd_engine(args, corpus)
     reqs = wmd_request_stream(corpus)
     bq = max(1, args.batch_queries)
     prune = None if args.prune == "none" else args.prune
@@ -170,15 +186,21 @@ def serve_wmd(args) -> None:
             rec["solved_frac"] = round(float(np.mean(solved))
                                        / args.n_docs, 4)
         if args.prune.startswith("ivf"):
-            rec["n_clusters"] = index.clusters.n_clusters
-            rec["nprobe"] = nprobe if nprobe else index.clusters.n_clusters
+            counts = getattr(engine, "cluster_counts", None) \
+                or (engine.index.clusters.n_clusters,)
+            rec["n_clusters"] = (list(counts) if len(counts) > 1
+                                 else counts[0])
+            rec["nprobe"] = nprobe if nprobe else \
+                ("all" if len(counts) > 1 else counts[0])
+    if getattr(engine, "n_shards", 1) > 1:
+        rec["shards"] = engine.n_shards
+        rec["docs_per_shard"] = list(engine.docs_per_shard)
     print(json.dumps(rec))
 
 
 def serve_async(args) -> None:
     """ISSUE 6 front-end: drive the long-lived :class:`ServingRuntime`
     open-loop and print per-request JSON lines + a summary record."""
-    from repro.core import WmdEngine, build_index
     from repro.data.corpus import make_corpus
     from repro.data.pipeline import wmd_request_stream
     from repro.runtime.serving import (FaultInjector, ServeConfig,
@@ -186,14 +208,7 @@ def serve_async(args) -> None:
                                        run_open_loop)
     corpus = make_corpus(vocab_size=args.vocab, embed_dim=args.embed_dim,
                          n_docs=args.n_docs, n_queries=8, seed=0)
-    index = build_index(corpus.docs, corpus.vecs,
-                        n_clusters=args.n_clusters)
-    engine = WmdEngine(index, lam=args.lam, n_iter=args.n_iter,
-                       impl=args.impl,
-                       tol=args.tol if args.tol > 0 else None,
-                       check_every=args.check_every,
-                       precision=args.precision, scope=args.scope,
-                       warm_start=args.warm_start)
+    engine = _build_wmd_engine(args, corpus)
     injector = None
     if args.inject_latency_rate or args.inject_transient_rate \
             or args.inject_poison_rate:
@@ -265,6 +280,12 @@ def main() -> None:
                     help="ivf cascades: probe this many clusters per query "
                          "(0 = all = exact top-k; fewer trades recall for "
                          "prune speed)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="> 1: partition the corpus into this many "
+                         "cluster-aligned doc shards over a device mesh "
+                         "(forces host-platform CPU devices when no real "
+                         "accelerators exist); per-shard cascades merge "
+                         "through one top-k collective")
     ap.add_argument("--n-clusters", default=None,
                     help="IVF cluster count at index build (default: "
                          "sqrt(n_docs); 'auto' sweeps cluster-radius "
@@ -331,6 +352,11 @@ def main() -> None:
     ap.add_argument("--lam", type=float, default=1.0)
     ap.add_argument("--n-iter", type=int, default=15)
     args = ap.parse_args()
+    if args.shards > 1:
+        # must run before make_corpus/engine build does the first jax
+        # array op — forcing host devices after backend init is a no-op
+        from repro.runtime.sharding import ensure_host_devices
+        ensure_host_devices(args.shards)
     if args.serve:
         serve_async(args)
     elif args.wmd:

@@ -102,6 +102,18 @@ class PoisonRequest(PoisonStep):
 
 
 # ----------------------------------------------------------------- tiers
+def _ivf_cluster_count(engine) -> int | None:
+    """IVF cluster count backing the nprobe ladder — the engine's own
+    count, or the SMALLEST per-shard count for a sharded engine (nprobe
+    clamps per shard, so sizing against the minimum keeps the reduced
+    tier a genuine reduction on every shard). None when un-clustered."""
+    counts = getattr(engine, "cluster_counts", None)
+    if counts:
+        return int(min(counts))
+    clusters = getattr(getattr(engine, "index", None), "clusters", None)
+    return None if clusters is None else int(clusters.n_clusters)
+
+
 class Tier(NamedTuple):
     """One rung of the degradation ladder."""
 
@@ -120,23 +132,31 @@ def default_tiers(engine: WmdEngine, prune: str,
     caller already serving approximate retrieval starts the ladder
     there); ``nprobe_degraded`` defaults to a quarter of it. Non-IVF
     prune specs have no nprobe knob, so their ladder is exact -> rwmd.
+
+    Works for both the single-device :class:`WmdEngine` and the sharded
+    engine (``nprobe`` applies PER SHARD there; the reduced tier's probe
+    count is sized against the smallest shard's cluster count so every
+    shard's clamp leaves a real reduction).
     """
+    per_shard = getattr(engine, "n_shards", 1) > 1
     tiers = [Tier(
         "exact", nprobe, True,
         "exact top-k" if nprobe is None else
-        f"approximate: probes {nprobe} IVF clusters per query; recall "
+        f"approximate: probes {nprobe} IVF clusters per query"
+        + (" per shard" if per_shard else "") + "; recall "
         "measured monotone in nprobe (fig9)")]
     is_ivf = isinstance(prune, str) and prune.startswith("ivf") \
-        and engine.index.clusters is not None
+        and _ivf_cluster_count(engine) is not None
     if is_ivf:
-        c = engine.index.clusters.n_clusters
+        c = _ivf_cluster_count(engine)
         top = nprobe if nprobe is not None else c
         red = nprobe_degraded if nprobe_degraded is not None \
             else max(1, top // 4)
         if red < top:
             tiers.append(Tier(
                 "reduced_nprobe", red, True,
-                f"degraded: probes {red}/{c} IVF clusters per query — "
+                f"degraded: probes {red}/{c} IVF clusters per query"
+                + (" per shard" if per_shard else "") + " — "
                 "approximate top-k, recall monotone in nprobe (fig9); "
                 "un-probed clusters are unreachable"))
     tiers.append(Tier(
@@ -284,8 +304,14 @@ def rwmd_topk(engine: WmdEngine, queries: Sequence, k: int):
     ``-1`` / NaN rows. The bound is admissible w.r.t. the computed
     Sinkhorn score (see ``core/prune.py``), so reported values never
     exceed the distance the exact tiers would have returned.
+
+    A sharded engine ranks per shard and merges through its single
+    top-k collective — delegate so the ladder's cheapest rung stays one
+    collective too.
     """
     from repro.core.prune import RwmdPruner
+    if hasattr(engine, "rwmd_topk"):
+        return engine.rwmd_topk(queries, k)
     queries = [np.asarray(q) for q in queries]
     n = engine.index.n_docs
     k = min(int(k), n)
@@ -642,6 +668,11 @@ class ServingRuntime:
                                    + self.engine.iter_stats_dropped)
         c["tier_ema_s"] = {self.tiers[i].name: round(v, 4)
                            for i, v in self._ema._ema.items()}
+        shards = getattr(self.engine, "n_shards", None)
+        if shards:
+            c["shards"] = int(shards)
+            c["docs_per_shard"] = [int(n) for n in
+                                   self.engine.docs_per_shard]
         return c
 
 

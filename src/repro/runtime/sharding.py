@@ -194,3 +194,49 @@ def cache_specs(cache, mesh: Mesh, seq_shard: bool = False) -> Any:
 def shardings(mesh: Mesh, tree_of_specs) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------- corpus doc sharding
+def ensure_host_devices(n: int) -> int:
+    """Make at least ``n`` devices visible, forcing host-platform CPU
+    devices when no real accelerators exist.
+
+    XLA only honors ``--xla_force_host_platform_device_count`` if it is
+    set BEFORE the backend initializes, so this merges the flag into
+    ``XLA_FLAGS`` and then touches ``jax.devices()``; call it before the
+    first jax array operation (``launch/serve.py --shards N`` and
+    ``examples/wmd_search.py --shards N`` do). Raises if the backend was
+    already initialized with too few devices — the flag cannot apply
+    retroactively. Returns the visible device count.
+    """
+    import os
+
+    n = int(n)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    count = jax.device_count()
+    if count < n:
+        raise RuntimeError(
+            f"need {n} devices but the jax backend initialized with "
+            f"{count}; set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={n} in the environment before the process does any "
+            f"jax work")
+    return count
+
+
+def corpus_mesh(n_shards: int, devices=None) -> Mesh:
+    """1-D mesh over the doc-shard axis for
+    :class:`repro.core.shard_index.ShardedCorpusIndex` — distinct from
+    the LM param mesh above: corpus serving shards DATA (docs), nothing
+    model-parallel."""
+    import numpy as np
+
+    devs = (list(devices) if devices is not None
+            else jax.devices()[:int(n_shards)])
+    if len(devs) < int(n_shards):
+        raise RuntimeError(f"corpus_mesh({n_shards}) needs {n_shards} "
+                           f"devices, found {len(devs)}; see "
+                           f"ensure_host_devices")
+    return Mesh(np.asarray(devs[:int(n_shards)]), axis_names=("shard",))

@@ -1,0 +1,235 @@
+"""Sharded corpus serving: invariance, structure, and diagnostics.
+
+Quick tests run in the main process on the single default device (a
+1-shard mesh needs no forced devices). Multi-device invariance and
+collective-structure tests run in subprocesses so XLA_FLAGS never
+pollutes the main test process (smoke tests must see exactly 1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+
+def _run(script: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+
+
+# ---------------------------------------------------------------- quick ----
+
+def test_bin_pack_clusters_covers_and_balances():
+    from repro.core import bin_pack_clusters
+
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 200, size=37)
+    for n_shards in (1, 2, 4, 7):
+        shard_of = bin_pack_clusters(sizes, n_shards)
+        assert shard_of.shape == (37,)
+        assert shard_of.min() >= 0 and shard_of.max() < n_shards
+        loads = np.bincount(shard_of, weights=sizes, minlength=n_shards)
+        # LPT greedy bound: no shard exceeds the ideal by a whole cluster
+        assert loads.max() <= sizes.sum() / n_shards + sizes.max()
+
+
+def test_single_shard_bitcompat_and_id_partition():
+    from repro.core import (ShardedWmdEngine, WmdEngine, build_index,
+                            shard_corpus)
+    from repro.data.corpus import make_corpus
+
+    c = make_corpus(vocab_size=256, embed_dim=16, n_docs=48, n_queries=2,
+                    seed=3)
+    index = build_index(c.docs, c.vecs, n_clusters=6)
+    ref = WmdEngine(index, lam=8.0, n_iter=25).search(
+        list(c.queries), 5, prune="ivf+wcd+rwmd")
+
+    sindex = shard_corpus(c.docs, c.vecs, 1, n_clusters=6)
+    # global ids partition [0, N) and owner agrees with the partition
+    ids = np.sort(np.concatenate(sindex.global_ids))
+    assert np.array_equal(ids, np.arange(48))
+    for s, gid in enumerate(sindex.global_ids):
+        assert np.all(sindex.owner[gid] == s)
+
+    res = ShardedWmdEngine(sindex, lam=8.0, n_iter=25).search(
+        list(c.queries), 5, prune="ivf+wcd+rwmd")
+    # shard-count-1 is bit-compatible with the single-device engine
+    assert np.array_equal(ref.indices, res.indices)
+    np.testing.assert_array_equal(ref.distances, res.distances)
+    assert np.array_equal(ref.solved, res.solved)
+
+
+def test_merge_is_exactly_one_all_gather():
+    import jax
+
+    from repro.core import ShardedWmdEngine, count_collectives, shard_corpus
+    from repro.data.corpus import make_corpus
+
+    c = make_corpus(vocab_size=256, embed_dim=16, n_docs=32, n_queries=1,
+                    seed=4)
+    engine = ShardedWmdEngine(shard_corpus(c.docs, c.vecs, 1, n_clusters=4),
+                              lam=8.0, n_iter=10)
+    k = 3
+    packed = np.zeros((1, 2, 2 * k), np.float32)
+    colls = count_collectives(jax.make_jaxpr(engine._merge_fn(k))(packed))
+    n_ag = sum(v for p, v in colls.items() if "all_gather" in p)
+    assert n_ag == 1 and sum(colls.values()) == 1, colls
+
+
+def test_underflow_report_names_shard_and_external_ids():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import select_support
+    from repro.core.distributed import sinkhorn_wmd_sparse_distributed
+    from repro.core.sinkhorn import LamUnderflowError
+    from repro.data.corpus import make_corpus
+
+    c = make_corpus(vocab_size=256, embed_dim=16, n_docs=16, n_queries=1,
+                    seed=5)
+    r, vs, _ = select_support(c.queries[0], c.vecs)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ext = np.arange(16, dtype=np.int64) + 7000
+    with pytest.raises(LamUnderflowError) as ei:
+        sinkhorn_wmd_sparse_distributed(r, vs, jnp.asarray(c.vecs), c.docs,
+                                        500.0, 10, mesh, doc_ids=ext)
+    msg = str(ei.value)
+    assert "owning shard(s)" in msg
+    assert "external doc ids" in msg
+    assert "70" in msg          # quoted ids are the external ones
+
+
+# --------------------------------------------------------- multi-device ----
+
+SCRIPT_INVARIANCE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import (ShardedWmdEngine, WmdEngine, append_docs_sharded,
+                            build_index, shard_corpus)
+    from repro.core.sparse import PaddedDocs
+    from repro.data.corpus import make_corpus
+
+    assert len(jax.devices()) == 8
+    c = make_corpus(vocab_size=512, embed_dim=16, n_docs=96, n_queries=3,
+                    seed=2)
+    queries, k = list(c.queries), 5
+    kw = dict(lam=8.0, n_iter=25)
+    ref = WmdEngine(build_index(c.docs, c.vecs, n_clusters=12), **kw).search(
+        queries, k, prune="ivf+wcd+rwmd")
+
+    def tie_equal(a, b, rtol=2e-4):
+        for qi in range(a.indices.shape[0]):
+            assert np.allclose(np.sort(a.distances[qi]),
+                               np.sort(b.distances[qi]), rtol=rtol,
+                               equal_nan=True), qi
+        return True
+
+    # 1/2/4 shards == single device at nprobe=None (exactness contract)
+    engines = {}
+    for s in (1, 2, 4):
+        sindex = shard_corpus(c.docs, c.vecs, s, n_clusters=12)
+        engines[s] = ShardedWmdEngine(sindex, **kw)
+        res = engines[s].search(queries, k, prune="ivf+wcd+rwmd")
+        tie_equal(ref, res)
+        if s == 1:
+            assert np.array_equal(ref.indices, res.indices)
+            assert np.array_equal(ref.distances, res.distances)
+
+    # recall vs exact top-k is monotone in nprobe, per shard count
+    def recall(res):
+        return np.mean([len(set(ref.indices[qi]) & set(res.indices[qi])) / k
+                        for qi in range(len(queries))])
+    for s in (2, 4):
+        prev = -1.0
+        for nprobe in (1, 2, 4, None):
+            r = recall(engines[s].search(queries, k, prune="ivf+wcd+rwmd",
+                                         nprobe=nprobe))
+            assert r >= prev - 1e-12, (s, nprobe, r, prev)
+            prev = r
+        assert prev == 1.0, (s, prev)   # nprobe=None is exact
+
+    # append-then-search == build-everything-then-search at nprobe=None
+    head = PaddedDocs(c.docs.idx[:64], c.docs.val[:64])
+    tail = PaddedDocs(c.docs.idx[64:], c.docs.val[64:])
+    sindex = shard_corpus(head, c.vecs, 4, n_clusters=12)
+    sindex = append_docs_sharded(sindex, tail)
+    eng = ShardedWmdEngine(sindex, **kw)
+    assert eng.n_docs == 96
+    ids = np.sort(np.concatenate(sindex.global_ids))
+    assert np.array_equal(ids, np.arange(96))
+    tie_equal(ref, eng.search(queries, k, prune="ivf+wcd+rwmd"))
+    print("SHARD_INVARIANCE_OK")
+""")
+
+
+SCRIPT_STRUCTURE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import (ShardedWmdEngine, count_collectives,
+                            select_support, shard_corpus)
+    from repro.core.distributed import sinkhorn_wmd_sparse_distributed
+    from repro.core.sinkhorn import LamUnderflowError
+    from repro.data.corpus import make_corpus
+
+    assert len(jax.devices()) == 8
+    c = make_corpus(vocab_size=512, embed_dim=16, n_docs=96, n_queries=2,
+                    seed=2)
+    engine = ShardedWmdEngine(shard_corpus(c.docs, c.vecs, 4, n_clusters=12),
+                              lam=8.0, n_iter=10)
+
+    # cross-shard communication on the serving path: EXACTLY one top-k
+    # merge all_gather, no other collective
+    k = 5
+    packed = np.zeros((4, 2, 2 * k), np.float32)
+    colls = count_collectives(jax.make_jaxpr(engine._merge_fn(k))(packed))
+    assert sum(colls.values()) == 1, colls
+    assert all("all_gather" in p for p in colls), colls
+
+    # the distributed solve path adds only the per-query residual pmax
+    r, vs, _ = select_support(c.queries[0], c.vecs)
+    mesh = jax.make_mesh((8,), ("data",))
+    fixed = jax.make_jaxpr(
+        lambda: sinkhorn_wmd_sparse_distributed(
+            r, vs, jnp.asarray(c.vecs), c.docs, 8.0, 10, mesh,
+            vshard_precompute=False, check_underflow=False))()
+    assert sum(count_collectives(fixed).values()) == 0, \\
+        count_collectives(fixed)
+    adaptive = jax.make_jaxpr(
+        lambda: sinkhorn_wmd_sparse_distributed(
+            r, vs, jnp.asarray(c.vecs), c.docs, 8.0, 10, mesh,
+            vshard_precompute=False, check_underflow=False, tol=1e-3))()
+    acolls = count_collectives(adaptive)
+    assert sum(acolls.values()) >= 1, acolls
+    assert all("pmax" in p for p in acolls), acolls
+
+    # a poisoning lam names the owning shard in the engine diagnosis
+    try:
+        engine_hot = ShardedWmdEngine(
+            shard_corpus(c.docs, c.vecs, 2, n_clusters=12),
+            lam=500.0, n_iter=10)
+        engine_hot.search(list(c.queries), 3, prune=None)
+        raise AssertionError("expected LamUnderflowError")
+    except LamUnderflowError as e:
+        assert "owning shard" in str(e), str(e)
+    print("SHARD_STRUCTURE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_shard_invariance_multidevice():
+    res = _run(SCRIPT_INVARIANCE)
+    assert "SHARD_INVARIANCE_OK" in res.stdout, res.stdout + res.stderr
+
+
+@pytest.mark.slow
+def test_shard_collective_structure_multidevice():
+    res = _run(SCRIPT_STRUCTURE)
+    assert "SHARD_STRUCTURE_OK" in res.stdout, res.stdout + res.stderr
