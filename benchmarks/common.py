@@ -21,3 +21,17 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def recall_at_k(result_indices, oracle_indices, k: int) -> float:
+    """Mean per-query recall@k of ``result_indices`` against the oracle's
+    top-k id sets (set intersection: tie ORDER differences don't count as
+    misses). Both arguments are (Q, >=k) id arrays; rows are compared
+    query-by-query. This is the single recall definition shared by the
+    fig9/fig13 curves and the oracle-recomputation tests."""
+    per_q = [
+        len(set(np.asarray(result_indices[qi])[:k].tolist())
+            & set(np.asarray(oracle_indices[qi])[:k].tolist())) / k
+        for qi in range(len(oracle_indices))
+    ]
+    return float(np.mean(per_q))

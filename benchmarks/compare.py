@@ -15,6 +15,12 @@ Sinkhorn iteration counts, not wall times — gating them catches
 CONVERGENCE regressions (the adaptive solve suddenly needing more
 iterations) that wall-clock noise would hide. A missing/empty baseline
 passes with a note — the first record on main seeds the trajectory.
+
+``--min-prefixes`` records gate in the OPPOSITE direction: they are
+quality metrics (``fig13.recall_*`` stores recall@k * 100), so a DROP is
+the regression — ``current/baseline < --min-ratio`` fails even though
+the max-ratio gate would wave the smaller value through. A record
+matching a min prefix is excluded from the max gate.
 """
 from __future__ import annotations
 
@@ -35,21 +41,33 @@ def load(path: str) -> dict:
         return {}
 
 
-def compare(baseline: dict, current: dict, max_ratio: float, prefixes) -> list[str]:
+def compare(
+    baseline: dict,
+    current: dict,
+    max_ratio: float,
+    prefixes,
+    min_ratio: float = 0.999,
+    min_prefixes=(),
+) -> list[str]:
     """Return the list of gating regressions (empty = pass)."""
     failures = []
     for name in sorted(current):
         if name not in baseline or baseline[name] <= 0:
             continue
         ratio = current[name] / baseline[name]
-        gating = any(name.startswith(p) for p in prefixes)
-        marker = "GATE" if gating else "info"
+        min_gating = any(name.startswith(p) for p in min_prefixes)
+        gating = not min_gating and any(name.startswith(p) for p in prefixes)
+        marker = "GATE-MIN" if min_gating else ("GATE" if gating else "info")
         print(
             f"[{marker}] {name}: {baseline[name]:.1f} -> {current[name]:.1f} us "
             f"({ratio:.2f}x)"
         )
         if gating and ratio > max_ratio:
             failures.append(f"{name}: {ratio:.2f}x > {max_ratio:.2f}x")
+        if min_gating and ratio < min_ratio:
+            failures.append(
+                f"{name}: {ratio:.4f}x < {min_ratio:.4f}x (quality metric dropped)"
+            )
     return failures
 
 
@@ -61,9 +79,30 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--prefixes",
         nargs="+",
-        default=["fig7", "fig8", "fig10.solve", "fig10.iters",
-                 "fig11.wall", "fig12.p50_low"],
+        default=[
+            "fig7",
+            "fig8",
+            "fig10.solve",
+            "fig10.iters",
+            "fig11.wall",
+            "fig12.p50_low",
+            "fig13.wall",
+        ],
         help="bench-name prefixes that gate (others are informational)",
+    )
+    ap.add_argument(
+        "--min-ratio",
+        type=float,
+        default=0.999,
+        help="min-direction gate threshold for quality metrics "
+        "(current/baseline below this fails)",
+    )
+    ap.add_argument(
+        "--min-prefixes",
+        nargs="+",
+        default=["fig13.recall"],
+        help="bench-name prefixes gated as quality metrics: a DROP "
+        "relative to baseline fails (excluded from the max gate)",
     )
     args = ap.parse_args(argv)
 
@@ -75,7 +114,14 @@ def main(argv=None) -> int:
     if not baseline:
         print(f"no baseline records in {args.baseline}; seeding run — pass")
         return 0
-    failures = compare(baseline, current, args.max_ratio, args.prefixes)
+    failures = compare(
+        baseline,
+        current,
+        args.max_ratio,
+        args.prefixes,
+        args.min_ratio,
+        args.min_prefixes,
+    )
     if failures:
         print("bench-trajectory gate FAILED:")
         for f in failures:

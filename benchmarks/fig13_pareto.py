@@ -1,0 +1,146 @@
+"""Beyond-paper Fig 13: the rank-then-refine recall/latency Pareto.
+
+The cascade's lower bounds already RANK well (LC-RWMD, Atasu et al.
+arXiv 1711.07227), so ``mode="refine"`` turns them into a bounded solve
+budget: rank every candidate by the cascade's tightest bound,
+Sinkhorn-solve only each query's top ``refine_factor * k`` picks.
+Distances returned for the reported top-k are exact truncated-Sinkhorn
+scores — only MEMBERSHIP is approximate, and this benchmark measures it
+the same way fig9 measures nprobe: recall@k against the exhaustive
+oracle, swept over (nprobe x tier x refine_factor x lam) on the fig8
+near-duplicate corpus.
+
+Correctness gates run BEFORE any timing is reported:
+
+1. recall@k is monotone non-decreasing in ``refine_factor`` (each
+   query's pick set is nested by construction — a violation is a bug,
+   not noise);
+2. recall@k == 1.0 at the covering factor (``refine_factor * k >=
+   n_docs``: refine degenerates to the exact path) with distances equal
+   to the exhaustive oracle's;
+3. the same covering-factor equivalence on a 1-shard
+   :class:`ShardedWmdEngine` (per-shard refine, merge unchanged).
+
+Emitted records: ``fig13.recall_*`` values are recall@k * 100 (gated
+with a MIN direction in ``benchmarks/compare.py`` — a recall drop is a
+regression even though its wall-ratio is < 1) and ``fig13.wall_*``
+values are usec per search batch (gated with the usual max-ratio).
+
+``FIG13_SMOKE=1`` runs the small config only (CI smoke); all three
+gates still assert.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import WmdEngine, build_index
+
+from .common import recall_at_k, row, timeit
+from .fig8_topk_prune import LAM, N_ITER, dedup_corpus
+from .fig9_ivf_prune import _n_clusters
+
+K = 10
+PRUNE = "ivf+pivot+wcd+rwmd"
+RF_CURVE = (1, 2, 4, 8)
+
+
+def _covering_factor(n_docs: int, k: int) -> int:
+    """Smallest refine_factor whose per-query budget covers every doc."""
+    return -(-n_docs // k)
+
+
+def _assert_covering(res, exhaustive, n_docs, label):
+    rec = recall_at_k(res.indices, exhaustive.indices, K)
+    assert rec == 1.0, \
+        f"{label}: refine recall@{K}={rec} at covering factor"
+    np.testing.assert_allclose(
+        np.sort(res.distances, axis=1),
+        np.sort(exhaustive.distances, axis=1),
+        rtol=1e-4, atol=1e-5)
+
+
+def _bench_one(n_docs, lams, nprobes, out):
+    corpus = dedup_corpus(n_docs)
+    queries = list(corpus.queries)
+    index = build_index(corpus.docs, corpus.vecs,
+                        n_clusters=_n_clusters(n_docs))
+    rf_cover = _covering_factor(n_docs, K)
+    for lam in lams:
+        engine = WmdEngine(index, lam=lam, n_iter=N_ITER, impl="sparse")
+        exhaustive = engine.search(queries, K, prune=None)
+
+        # ---- correctness gates FIRST (assert, then time) ----
+        recalls = []
+        for rf in RF_CURVE:
+            res = engine.search(queries, K, prune=PRUNE, mode="refine",
+                                refine_factor=rf)
+            recalls.append(recall_at_k(res.indices, exhaustive.indices, K))
+        for lo, hi in zip(recalls, recalls[1:]):
+            assert hi >= lo, \
+                f"lam={lam:g}: recall not monotone in refine_factor: " \
+                f"{recalls} over {RF_CURVE}"
+        cover = engine.search(queries, K, prune=PRUNE, mode="refine",
+                              refine_factor=rf_cover)
+        _assert_covering(cover, exhaustive, n_docs, f"lam={lam:g}")
+
+        # ---- the Pareto curves ----
+        for nprobe in nprobes:
+            np_label = "all" if nprobe is None else str(nprobe)
+            t_exact = timeit(
+                lambda: engine.search(queries, K, prune=PRUNE,
+                                      nprobe=nprobe),
+                warmup=1, iters=3)
+            out(row(f"fig13.wall_exact_np{np_label}_lam{lam:g}_n{n_docs}",
+                    t_exact * 1e6, f"Q={len(queries)}"))
+            for rf in RF_CURVE:
+                res = engine.search(queries, K, prune=PRUNE,
+                                    nprobe=nprobe, mode="refine",
+                                    refine_factor=rf)
+                rec = recall_at_k(res.indices, exhaustive.indices, K)
+                t_rf = timeit(
+                    lambda: engine.search(queries, K, prune=PRUNE,
+                                          nprobe=nprobe, mode="refine",
+                                          refine_factor=rf),
+                    warmup=1, iters=3)
+                out(row(
+                    f"fig13.recall_rf{rf}_np{np_label}"
+                    f"_lam{lam:g}_n{n_docs}",
+                    rec * 100.0,
+                    f"recall@{K}={rec:.3f} "
+                    f"solved={float(res.solved.mean()):.1f}/{n_docs}"))
+                out(row(
+                    f"fig13.wall_refine_rf{rf}_np{np_label}"
+                    f"_lam{lam:g}_n{n_docs}",
+                    t_rf * 1e6,
+                    f"vs exact {t_exact / t_rf:.2f}x"))
+        from repro.runtime.serving import rwmd_topk
+        idx_r, _ = rwmd_topk(engine, queries, K)
+        t_rwmd = timeit(lambda: rwmd_topk(engine, queries, K),
+                        warmup=1, iters=3)
+        out(row(f"fig13.wall_rwmd_lam{lam:g}_n{n_docs}", t_rwmd * 1e6,
+                f"recall@{K}="
+                f"{recall_at_k(idx_r, exhaustive.indices, K):.3f} "
+                "(bound-only, no solve)"))
+
+    # ---- sharded covering-factor equivalence (1 shard, in-process) ----
+    from repro.core import ShardedWmdEngine, shard_corpus
+    sindex = shard_corpus(corpus.docs, corpus.vecs, 1,
+                          n_clusters=_n_clusters(n_docs))
+    seng = ShardedWmdEngine(sindex, lam=lams[0], n_iter=N_ITER)
+    sexh = seng.search(queries, K, prune=None)
+    scover = seng.search(queries, K, prune=PRUNE, mode="refine",
+                         refine_factor=rf_cover)
+    _assert_covering(scover, sexh, n_docs, "sharded(1)")
+
+
+def main(out=print) -> None:
+    if os.environ.get("FIG13_SMOKE"):
+        _bench_one(512, lams=(LAM,), nprobes=(None,), out=out)
+    else:
+        _bench_one(2048, lams=(LAM, 2 * LAM), nprobes=(None, 4), out=out)
+
+
+if __name__ == "__main__":
+    main()

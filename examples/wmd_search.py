@@ -10,7 +10,10 @@ frozen once, queries are bucketed by support size, and each batch runs
 most documents, the fused Sinkhorn solve runs only on the surviving
 candidates, and the exact top-k comes back with latency stats and the
 solved-fraction per query. ``--prune none`` scores every document
-(exhaustive oracle); ``--looped`` falls back to the seed per-query loop.
+(exhaustive oracle); ``--mode refine`` bounds the solve budget to
+``refine-factor * topk`` bound-ranked candidates per query (distances
+stay exact, membership is approximate — fig13 measures the recall);
+``--looped`` falls back to the seed per-query loop.
 """
 import argparse
 import sys
@@ -35,12 +38,20 @@ def main() -> None:
     ap.add_argument("--topk", type=int, default=5)
     ap.add_argument("--prune", default="rwmd",
                     choices=["none", "wcd", "rwmd", "wcd+rwmd", "ivf+wcd",
-                             "ivf+rwmd", "ivf+wcd+rwmd"],
+                             "ivf+rwmd", "ivf+wcd+rwmd",
+                             "ivf+pivot+wcd+rwmd", "ivf+pivot+rwmd"],
                     help="prune-stage lower bound or IVF cascade; "
-                         "'none' = exhaustive")
+                         "'none' = exhaustive; 'pivot' rungs use the "
+                         "index's precomputed pivot triangle bounds")
     ap.add_argument("--nprobe", type=int, default=0,
                     help="ivf cascades: clusters probed per query "
                          "(0 = all = exact top-k)")
+    ap.add_argument("--mode", default="exact", choices=["exact", "refine"],
+                    help="'refine': rank candidates by the cascade's "
+                         "bound, Sinkhorn-solve only the top "
+                         "refine-factor*topk per query (needs --prune)")
+    ap.add_argument("--refine-factor", type=int, default=4,
+                    help="--mode refine: solve budget multiple")
     ap.add_argument("--impl", default="sparse",
                     help="engine: sparse|kernel; --looped accepts any "
                          "repro.core.IMPLS entry")
@@ -129,12 +140,14 @@ def main() -> None:
             # 'auto'/numeric strings parsed by build_index itself
             engine = WmdEngine(index, **kw)
         res = engine.search(queries, args.topk, prune=prune,
-                            nprobe=nprobe)                # compile pass
+                            nprobe=nprobe, mode=args.mode,
+                            refine_factor=args.refine_factor)  # compile
         batch_ms = []
         for _ in range(args.batches):
             t0 = time.perf_counter()
             res = engine.search(queries, args.topk, prune=prune,
-                                nprobe=nprobe)
+                                nprobe=nprobe, mode=args.mode,
+                                refine_factor=args.refine_factor)
             batch_ms.append((time.perf_counter() - t0) * 1e3)
         for qi, q in enumerate(queries):
             print(f"query {qi} (v_r={int((q > 0).sum())}): "

@@ -66,15 +66,28 @@ Cluster-major layout (ISSUE 4)
     ``query_batch`` rows and ``search`` indices are unchanged.
     ``append_docs`` keeps the invariant within the grown group.
 
-Typical use::
+Typical use (runnable — the CI ``docs`` job executes it as a doctest)::
 
-    index = build_index(corpus.docs, corpus.vecs)
-    engine = WmdEngine(index, lam=9.0, n_iter=15, impl="sparse",
-                       precision="log")   # lam=9 underflows exp(-lam*M)
-    # at this corpus' distance scale; the log-domain policy cannot
-    dists = engine.query_batch(queries)            # (Q, N) exhaustive
-    res = engine.search(queries, k=10)             # pruned top-k
-    index2 = append_docs(index, more_docs)         # streaming, no rebuild
+    >>> from repro.core import WmdEngine, build_index
+    >>> from repro.data.corpus import make_corpus
+    >>> c = make_corpus(vocab_size=64, embed_dim=8, n_docs=12,
+    ...                 n_queries=2, words_per_doc=(3, 8), seed=0)
+    >>> index = build_index(c.docs, c.vecs, n_clusters=3)  # frozen once
+    >>> engine = WmdEngine(index, lam=2.0, n_iter=10)
+    >>> res = engine.search(list(c.queries), k=3,
+    ...                     prune="ivf+pivot+wcd+rwmd")    # exact top-3
+    >>> res.indices.shape, res.distances.shape
+    ((2, 3), (2, 3))
+    >>> ref = engine.search(list(c.queries), k=3,
+    ...                     prune="ivf+pivot+wcd+rwmd", mode="refine",
+    ...                     refine_factor=4)  # bounded solve budget
+    >>> bool((ref.solved <= 4 * 3).all())
+    True
+
+At larger ``lam`` (the paper's ``lam=9``) pass ``precision="log"`` —
+fp32 ``exp(-lam*M)`` underflows first and the engine raises
+:class:`LamUnderflowError` with a diagnosis rather than returning NaN.
+``append_docs(index, more_docs)`` grows the corpus without a rebuild.
 """
 from __future__ import annotations
 
@@ -212,6 +225,36 @@ def _kmeans(centroids: jax.Array, n_clusters: int, n_iters: int = 10,
     return centers, assign
 
 
+@jax.jit
+def _pivot_dists(points: jax.Array, pivots: jax.Array) -> jax.Array:
+    """(M, w) points x (P, w) pivots -> (M, P) Euclidean distances — the
+    precomputed corpus half (and the per-chunk query half) of the pivot
+    triangle prestage ``|d(q, p) - d(n, p)| <= ||qcent - centroid_n||``."""
+    a2 = jnp.sum(points * points, axis=1)[:, None]
+    b2 = jnp.sum(pivots * pivots, axis=1)[None, :]
+    d2 = a2 + b2 - 2.0 * (points @ pivots.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def _select_pivots(vecs: jax.Array, n_pivots: int, seed: int = 0,
+                   sample: int = 65536) -> jax.Array:
+    """Pivot words for the triangle prestage: farthest-point selection over
+    the vocabulary embeddings (``sample``-capped at vocabulary scale), so
+    the reference set spans the embedding space's extremes — that is what
+    makes ``max_p |d(q,p) - d(n,p)|`` a tight reverse-triangle bound.
+    Returns (P, w) rows of ``vecs`` (actual word vectors, not centroids).
+    """
+    v = vecs.shape[0]
+    n_pivots = max(1, min(int(n_pivots), v))
+    rng = np.random.default_rng(seed)
+    pool = vecs
+    if v > sample:
+        keep = np.sort(rng.choice(v, size=sample, replace=False))
+        pool = jnp.take(vecs, jnp.asarray(keep, jnp.int32), axis=0)
+    return _farthest_point_init(pool, n_pivots,
+                                int(rng.integers(pool.shape[0])))
+
+
 def _membership(assign: np.ndarray, n_clusters: int):
     """(order, starts) from an assignment: cluster c's docs are the
     contiguous slice order[starts[c]:starts[c + 1]]."""
@@ -324,6 +367,10 @@ class CorpusIndex(NamedTuple):
     #                               (the CascadePruner's shortlist stage)
     ext_ids: np.ndarray = None   # (N,) host: storage id -> original doc id
     remap: np.ndarray = None     # (N,) host: original doc id -> storage id
+    pivots: jax.Array = None     # (P, w) pivot word embeddings (the
+    #                              cascade's pivot triangle prestage)
+    doc_pivot_d: jax.Array = None  # (N, P) device: ||centroid_n - pivot_p||
+    #                                frozen at build; grows on append
 
     @property
     def n_docs(self) -> int:
@@ -410,7 +457,8 @@ def _doc_centroids(idx_np, val_np, vecs_np, chunk: int = 2048):
 def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
                 doc_groups: int = 4, n_clusters=None,
                 ivf_iters: int = 10, ivf_seed: int = 0,
-                clusters=None) -> CorpusIndex:
+                clusters=None, n_pivots: int = 8,
+                pivot_seed: int = 0) -> CorpusIndex:
     """Freeze the corpus side: device-resident docs + embeddings + norms +
     per-doc centroids (the WCD prune stage's corpus half) + the IVF coarse
     quantizer over those centroids (the cascade's shortlist stage).
@@ -442,6 +490,21 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
     with locally relabeled ids) — membership, radii, and the cluster-major
     permutation are still derived here, so every downstream invariant
     holds unchanged.
+
+    ``n_pivots`` pivot words (farthest-point over the vocabulary
+    embeddings, deterministic in ``pivot_seed``) are frozen with their
+    per-doc centroid distances ``doc_pivot_d`` — the corpus half of the
+    :class:`~repro.core.prune.CascadePruner`'s ``"pivot"`` triangle
+    prestage (Werner & Laber style, arXiv:1912.00509): at query time
+    ``max_p |d(q, p) - d(n, p)|`` lower-bounds the WCD at O(P) per pair
+    instead of O(w). ``n_pivots=0`` skips the precompute (the ``"pivot"``
+    stage then raises if requested).
+
+    Exactness contract: the index itself is lossless — every document is
+    stored exactly (permuted only), and ``WmdEngine`` results over it are
+    independent of ``doc_groups``, ``n_clusters``, ``n_pivots``, and the
+    storage permutation. Clustering and pivots only steer *pruning*; they
+    change which docs get bounded/solved, never a returned distance.
     """
     vecs = jnp.asarray(vecs, dtype)
     vecs_np = np.asarray(vecs)
@@ -462,7 +525,7 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
                              f"outside [0, {n_clusters})")
         return _assemble_index(idx_np, val_np, centroids_np, vecs,
                                centers, assign, n_clusters, doc_groups,
-                               dtype)
+                               dtype, n_pivots, pivot_seed)
     if isinstance(n_clusters, str):
         if n_clusters == "auto":
             n_clusters = auto_n_clusters(centroids_np, seed=ivf_seed)
@@ -481,11 +544,13 @@ def build_index(docs: PaddedDocs, vecs, dtype=jnp.float32,
         centers = jnp.zeros((n_clusters, vecs.shape[1]), dtype)
         assign = np.zeros((0,), np.int32)
     return _assemble_index(idx_np, val_np, centroids_np, vecs, centers,
-                           assign, n_clusters, doc_groups, dtype)
+                           assign, n_clusters, doc_groups, dtype,
+                           n_pivots, pivot_seed)
 
 
 def _assemble_index(idx_np, val_np, centroids_np, vecs, centers, assign,
-                    n_clusters: int, doc_groups: int, dtype) -> CorpusIndex:
+                    n_clusters: int, doc_groups: int, dtype,
+                    n_pivots: int = 8, pivot_seed: int = 0) -> CorpusIndex:
     """Shared :func:`build_index` tail: cluster-major permutation, nnz
     grouping, membership/radii, device upload. Split out so the sharded
     builder can reuse it with a precomputed (frozen) quantizer."""
@@ -514,6 +579,10 @@ def _assemble_index(idx_np, val_np, centroids_np, vecs, centers, assign,
     centroids = jnp.asarray(centroids_np)
     c_order, c_starts = _membership(assign, n_clusters)
     radii = _cluster_radii(centroids, centers, assign, n_clusters)
+    pivots = doc_pivot_d = None
+    if n_pivots and int(n_pivots) > 0:
+        pivots = _select_pivots(vecs, int(n_pivots), seed=pivot_seed)
+        doc_pivot_d = _pivot_dists(centroids, pivots)
     return CorpusIndex(docs=PaddedDocs(idx=jnp.asarray(idx_np),
                                        val=jnp.asarray(val_np)),
                        groups=tuple(groups), vecs=vecs,
@@ -524,7 +593,8 @@ def _assemble_index(idx_np, val_np, centroids_np, vecs, centers, assign,
                                             order=c_order, starts=c_starts,
                                             radii=radii,
                                             assign_dev=jnp.asarray(assign)),
-                       ext_ids=ext_ids, remap=remap)
+                       ext_ids=ext_ids, remap=remap,
+                       pivots=pivots, doc_pivot_d=doc_pivot_d)
 
 
 def _pad_width(a, width: int):
@@ -637,11 +707,19 @@ def append_docs(index: CorpusIndex, new_docs: PaddedDocs,
                if index.ext_ids is not None else None)
     remap = (np.concatenate([index.remap, tail_ids])
              if index.remap is not None else None)
+    doc_pivot_d = index.doc_pivot_d
+    if index.pivots is not None:
+        # frozen pivots (like the cluster centers): only the new rows of
+        # the distance table are computed
+        doc_pivot_d = jnp.concatenate(
+            [index.doc_pivot_d,
+             _pivot_dists(jnp.asarray(cent_new), index.pivots)])
     return index._replace(
         docs=docs, groups=groups, docs_host=docs_host,
         centroids=jnp.concatenate([index.centroids,
                                    jnp.asarray(cent_new)]),
-        clusters=clusters, ext_ids=ext_ids, remap=remap)
+        clusters=clusters, ext_ids=ext_ids, remap=remap,
+        doc_pivot_d=doc_pivot_d)
 
 
 def bucket_size(v_r: int, min_bucket: int = 8) -> int:
@@ -933,7 +1011,9 @@ class SearchResult(NamedTuple):
     Rows for empty queries (no support) hold ``indices == -1`` and NaN
     distances. ``solved`` counts the documents that went through the exact
     Sinkhorn solve for each query — ``n_docs`` when exhaustive, the
-    surviving-candidate count when pruned.
+    surviving-candidate count when pruned, and the query's own
+    rank-selected pick count (<= ``refine_factor * k``) in
+    ``mode="refine"``.
     """
 
     indices: np.ndarray    # (Q, k) int32 doc ids, ascending distance
@@ -1283,13 +1363,14 @@ class WmdEngine:
 
     # ------------------------------------------------------------ search
     def search(self, queries: Sequence, k: int, prune: object = "rwmd",
-               nprobe: int | None = None) -> SearchResult:
+               nprobe: int | None = None, mode: str = "exact",
+               refine_factor: int = 4) -> SearchResult:
         """Staged top-k retrieval: prune -> solve -> rank.
 
         ``prune=None`` scores exhaustively (:meth:`query_batch` + argsort,
         bit-for-bit). Otherwise ``prune`` names a lower bound from
         :mod:`repro.core.prune` (``"wcd"``, ``"rwmd"``, ``"wcd+rwmd"``, a
-        cascaded ``"ivf+wcd+rwmd"``) or is a
+        cascaded ``"ivf+pivot+wcd+rwmd"``) or is a
         :class:`~repro.core.prune.Pruner` /
         :class:`~repro.core.prune.CascadePruner` instance, and per chunk:
 
@@ -1321,11 +1402,51 @@ class WmdEngine:
         never scored, recall is measured (monotone in ``nprobe``), and a
         query with fewer than k reachable candidates pads its result row
         with ``-1`` / NaN.
+
+        ``mode="refine"`` (rank-then-refine, LC-RWMD style) trades the
+        exact-top-k guarantee for a *bounded solve budget*: instead of
+        seed-solve + threshold + survivor-solve, every candidate is RANKED
+        by the pruner's tightest lower bound and only each query's best
+        ``k' = refine_factor * k`` candidates are Sinkhorn-solved; the
+        top-k of those exact distances is returned. Exactness contract:
+
+        - every returned *distance* is still the exact (converged /
+          truncated per the engine's solve policy) Sinkhorn score — the
+          approximation is only in *which* docs get solved;
+        - each query is ranked over its OWN k' picks, and pick sets are
+          nested in ``refine_factor``, so recall@k against the exact path
+          is monotone in ``refine_factor`` for a fixed query batch
+          (measured in ``benchmarks/fig13_pareto.py``);
+        - once ``k'`` covers the whole candidate universe (``nprobe``
+          permitting), the result equals ``mode="exact"`` at the same
+          ``nprobe`` — exactly equal to the exhaustive top-k when
+          ``nprobe=None`` (up to tie order);
+        - ``result.solved`` reports each query's own solved-candidate
+          count (<= ``refine_factor * k``), not the chunk union.
+
+        Failure modes: raises :class:`ValueError` for ``k <= 0``, an
+        unknown ``mode``/``prune`` spec, ``refine_factor < 1``, or
+        ``mode="refine"`` with ``prune=None`` (no bound to rank by);
+        raises :class:`~repro.core.sinkhorn.LamUnderflowError` when
+        ``exp(-lam * M)`` underflows for a solved pair (impossible under
+        ``precision="log"``).
         """
         queries = [np.asarray(q) for q in queries]
         n = self.index.n_docs
         if k <= 0:
             raise ValueError(f"k must be positive, got {k}")
+        if mode not in ("exact", "refine"):
+            raise ValueError(f"mode must be 'exact' or 'refine', "
+                             f"got {mode!r}")
+        if mode == "refine":
+            if prune is None:
+                raise ValueError(
+                    "mode='refine' ranks candidates by a pruner's lower "
+                    "bound; prune=None has no bound to rank by — use "
+                    "mode='exact' for the exhaustive path")
+            if int(refine_factor) < 1:
+                raise ValueError(f"refine_factor must be >= 1, "
+                                 f"got {refine_factor}")
         k = min(int(k), n)
         nq = len(queries)
         out_i = np.full((nq, k), -1, np.int32)
@@ -1348,6 +1469,12 @@ class WmdEngine:
         pruner = resolve_pruner(prune, use_kernel=(self.impl == "kernel"),
                                 interpret=self.interpret, nprobe=nprobe)
         _, chunks = self._plan(queries)
+        if mode == "refine":
+            if chunks:
+                self._search_refine(queries, k, pruner, nprobe, chunks,
+                                    int(refine_factor), out_i, out_d,
+                                    solved)
+            return SearchResult(out_i, out_d, solved)
         if isinstance(pruner, CascadePruner):
             if chunks:
                 self._search_cascade(queries, k, pruner, nprobe, chunks,
@@ -1456,6 +1583,118 @@ class WmdEngine:
         d_surv, _ = solve(surv, qmask_surv, "survivor", warm=warm)
         return cand, np.concatenate([d_seed, d_surv], axis=1)
 
+    def _make_solver(self, queries, chunks, live_q):
+        """Stage every v_r chunk once (sup/r/mask + the kq pair) and
+        return ``solve_all(doc_ids, qmask, stage, warm, prof)`` — the
+        chunk-looped exact solve over one candidate id array, shared by
+        the cascade and refine drivers. Rows of the returned (qg, |ids|)
+        matrix follow ``live_q`` order; NaN rows raise
+        :class:`LamUnderflowError` before returning."""
+        index = self.index
+        qg = len(live_q)
+        row_of = {qi: g for g, qi in enumerate(live_q)}
+        prepped = []
+        for chunk, width in chunks:
+            cq = [queries[qi] for qi in chunk]
+            sup, r, mask = self._prep_chunk(cq, width)
+            prepped.append((chunk, cq, sup, r, mask, self._kq(sup, mask)))
+
+        def solve_all(doc_ids, qmask=None, stage="seed", warm=None,
+                      prof=None):
+            # -> ((qg, |ids|) np NaN-checked, per-chunk warm profiles)
+            out = np.empty((qg, doc_ids.size), self.dtype)
+            profs = []
+            # one gather, shared by chunks; survivor ids are cluster-sorted
+            # storage ids, so this is a near-contiguous host slice
+            grp = index.subset(doc_ids, storage=True)
+            n_pad = grp.docs.idx.shape[0]
+            for ci, (chunk, cq, sup, r, mask, kq) in enumerate(prepped):
+                rows = [row_of[qi] for qi in chunk]
+                qm = (None if qmask is None else self._pad_qdoc(
+                    qmask[rows], r.shape[0], n_pad))
+                pm = (None if prof is None else self._pad_qdoc(
+                    prof[rows], r.shape[0], n_pad))
+                w, xp = self._solve_group(
+                    kq, r, mask, grp, n_live=len(chunk), stage=stage,
+                    qdoc_mask=qm, x0q=None if warm is None else warm[ci],
+                    want_profile=True, prof_mask=pm)
+                profs.append(xp)
+                w = np.asarray(w)[:len(chunk), :doc_ids.size]
+                self._raise_if_nan(w, cq)
+                out[rows] = w
+            return out, profs
+
+        return solve_all
+
+    def _search_refine(self, queries, k, pruner, nprobe, chunks,
+                       refine_factor, out_i, out_d, solved):
+        """Rank-then-refine driver (``mode="refine"``): ONE bound pass
+        ranks the whole candidate universe, then exactly one solve covers
+        the union of each query's top ``k' = refine_factor * k`` picks.
+
+        Ranking bound: a cascade's TIGHTEST stage (its last — RWMD in the
+        default specs) over the probed clusters' members; a full-sweep
+        pruner's own bound over every doc. Each query is ranked over its
+        OWN picks only, so pick sets are nested in ``refine_factor`` and
+        recall against the exact path is monotone; at a ``k'`` covering
+        the candidate universe this IS the exact path's answer (every
+        candidate solved, ranked by exact distance)."""
+        from .prune import CascadePruner, _pad_pow2_ids
+        index = self.index
+        live_q = [qi for chunk, _ in chunks for qi in chunk]
+        qg = len(live_q)
+        width_g = max(width for _, width in chunks)
+        sup_g, r_g, mask_g = self._prep_chunk(
+            [queries[qi] for qi in live_q], width_g)
+        if isinstance(pruner, CascadePruner):
+            cdists, pm, qcent = pruner.probe(index, sup_g, r_g, mask_g,
+                                             nprobe)
+            # candidate universe = union of probed clusters' members
+            # (every cluster when pm is None — the exhaustive probe)
+            keep_c = (np.ones(index.clusters.n_clusters, bool)
+                      if pm is None else np.asarray(pm)[:qg].any(axis=0))
+            cand = pruner.cluster_members(index, keep_c)
+            if cand.size == 0:
+                return
+            sp = _pad_pow2_ids(cand)
+            lb = pruner.stage_bounds(
+                pruner.stages[-1], index, sup_g, r_g, mask_g, sp,
+                cand.size,
+                pruner.id_qmask(index, pm, sp, cand.size,
+                                qp=sup_g.shape[0]), qcent=qcent)
+        else:
+            cand = np.arange(index.n_docs, dtype=np.int32)
+            sp = cand
+            lb = pruner.lower_bounds(index, sup_g, r_g, mask_g)
+        kp = min(refine_factor * k, cand.size)
+        neg, pos = jax.lax.top_k(-lb[:qg], kp)
+        neg, pos = np.asarray(neg), np.asarray(pos)
+        # per-query own picks; -inf bounds are non-candidates (a query
+        # whose probed universe holds fewer than k' docs)
+        own = []
+        for g in range(qg):
+            p = pos[g][np.isfinite(neg[g])]
+            p = p[p < cand.size]
+            own.append(np.unique(sp[p]).astype(np.int32))
+        ids = np.unique(np.concatenate(own))
+        if ids.size == 0:
+            return
+        qmask_own = np.stack([np.isin(ids, o) for o in own])
+        solve_all = self._make_solver(queries, chunks, live_q)
+        d, _ = solve_all(ids, qmask_own if self._scoped() else None,
+                         "refine")
+        # rank each query over its OWN picks only — batch-mates' union
+        # candidates are excluded so the pick-set nesting (and with it
+        # the recall monotonicity) holds per query, not just per batch
+        dm = np.where(qmask_own, d, np.inf)
+        ids_ext = self._ext(ids)
+        for g, qi in enumerate(live_q):
+            n_own = int(qmask_own[g].sum())
+            order = np.argsort(dm[g], kind="stable")[:min(k, n_own)]
+            out_i[qi, :order.size] = ids_ext[order]
+            out_d[qi, :order.size] = d[g, order]
+            solved[qi] = n_own
+
     def _search_cascade(self, queries, k, pruner, nprobe, chunks,
                         out_i, out_d, solved):
         """CascadePruner driver — sub-O(N) per-doc prune work, ONE global
@@ -1515,37 +1754,7 @@ class WmdEngine:
 
         # solve stage stays v_r-bucketed: per-chunk staging, reused for
         # the seed and survivor solves
-        row_of = {qi: g for g, qi in enumerate(live_q)}
-        prepped = []
-        for chunk, width in chunks:
-            cq = [queries[qi] for qi in chunk]
-            sup, r, mask = self._prep_chunk(cq, width)
-            prepped.append((chunk, cq, sup, r, mask, self._kq(sup, mask)))
-
-        def solve_all(doc_ids, qmask=None, stage="seed", warm=None,
-                      prof=None):
-            # -> ((qg, |ids|) np NaN-checked, per-chunk warm profiles)
-            out = np.empty((qg, doc_ids.size), self.dtype)
-            profs = []
-            # one gather, shared by chunks; survivor ids are cluster-sorted
-            # storage ids, so this is a near-contiguous host slice
-            grp = index.subset(doc_ids, storage=True)
-            n_pad = grp.docs.idx.shape[0]
-            for ci, (chunk, cq, sup, r, mask, kq) in enumerate(prepped):
-                rows = [row_of[qi] for qi in chunk]
-                qm = (None if qmask is None else self._pad_qdoc(
-                    qmask[rows], r.shape[0], n_pad))
-                pm = (None if prof is None else self._pad_qdoc(
-                    prof[rows], r.shape[0], n_pad))
-                w, xp = self._solve_group(
-                    kq, r, mask, grp, n_live=len(chunk), stage=stage,
-                    qdoc_mask=qm, x0q=None if warm is None else warm[ci],
-                    want_profile=True, prof_mask=pm)
-                profs.append(xp)
-                w = np.asarray(w)[:len(chunk), :doc_ids.size]
-                self._raise_if_nan(w, cq)
-                out[rows] = w
-            return out, profs
+        solve_all = self._make_solver(queries, chunks, live_q)
 
         # seed residual scope = the union of real seed docs (any of them
         # can contend for any query once thresholds exist); own picks

@@ -45,10 +45,23 @@ Bounds are in raw distance units (no lam): they bound the transport-cost
 part ``<P, M>``, which is exactly what the solve stage returns.
 
 ``CascadePruner`` (ISSUE 3) runs these stages *cheapest-first* over a
-shrinking candidate set — IVF cluster shortlist, WCD on the shortlist,
-RWMD only on WCD survivors (and only over the survivors' own vocabulary) —
-instead of computing every bound on every document; see its docstring for
-the exactness-vs-``nprobe`` contract.
+shrinking candidate set — IVF cluster shortlist, pivot triangle bound,
+WCD on the shortlist, RWMD only on WCD survivors (and only over the
+survivors' own vocabulary) — instead of computing every bound on every
+document; see its docstring for the exactness-vs-``nprobe`` contract.
+
+Spec resolution (runnable — the CI ``docs`` job executes this as a
+doctest)::
+
+    >>> from repro.core.prune import PRUNERS, resolve_pruner
+    >>> "ivf+pivot+wcd+rwmd" in PRUNERS
+    True
+    >>> type(resolve_pruner("ivf+pivot+wcd+rwmd")).__name__
+    'CascadePruner'
+    >>> resolve_pruner("ivf+pivot+wcd+rwmd").stages
+    ('pivot', 'wcd', 'rwmd')
+    >>> resolve_pruner("rwmd").name
+    'rwmd'
 """
 from __future__ import annotations
 
@@ -229,6 +242,36 @@ def _wcd_dense_keep(qcent, centroids, pm, assign, thresh):
 
 
 @jax.jit
+def _pivot_stage(qd, dd, ids_pad, qmask):
+    """Pivot triangle bounds for a candidate id array, one dispatch:
+    gather candidate pivot-distance rows -> ``max_p |d(q,p) - d(n,p)|``
+    (reverse triangle inequality in the embedding metric, so it
+    lower-bounds the WCD) -> candidacy fold to +inf."""
+    cand = jnp.take(dd, ids_pad, axis=0)                 # (Sp, P)
+    lb = jnp.max(jnp.abs(qd[:, None, :] - cand[None, :, :]), axis=-1)
+    return jnp.where(qmask, lb, jnp.inf)
+
+
+@jax.jit
+def _pivot_dense_keep(qd, dd, pm, assign, thresh):
+    """Dense pivot threshold pass over the whole corpus, one dispatch —
+    the pivot twin of :func:`_wcd_dense_keep`, at O(P) per pair instead
+    of the WCD GEMM's O(w)."""
+    qc = thresh.shape[0]
+    lb = jnp.max(jnp.abs(qd[:qc, None, :] - dd[None, :, :]), axis=-1)
+    cand = jnp.take(pm[:qc], assign, axis=1)             # (qc, N) candidacy
+    return jnp.any(cand & (lb <= thresh[:, None]), axis=0)
+
+
+@jax.jit
+def _pivot_dense_keep_all(qd, dd, thresh):
+    """Exhaustive-probe variant of :func:`_pivot_dense_keep`."""
+    qc = thresh.shape[0]
+    lb = jnp.max(jnp.abs(qd[:qc, None, :] - dd[None, :, :]), axis=-1)
+    return jnp.any(lb <= thresh[:, None], axis=0)
+
+
+@jax.jit
 def _rwmd_epilogue(minm, rel, val, qmask):
     """RWMD gather + doc-mass contraction + candidacy fold, one dispatch.
     Separate from the min-cdist producer on purpose (the XLA CPU
@@ -314,7 +357,8 @@ def _ids_qmask(pm, assign_ids, n_real):
 
 class CascadePruner:
     """Cheapest-first cascade over a shrinking candidate set: IVF cluster
-    probe + cluster-radius filter -> per-doc WCD -> RWMD min-cdist.
+    probe + cluster-radius filter -> pivot triangle bounds -> per-doc WCD
+    -> RWMD min-cdist.
 
     Unlike the full-sweep pruners above (one (Q, N) bound matrix), the
     cascade's per-doc work is sub-O(N):
@@ -328,8 +372,17 @@ class CascadePruner:
        the triangle inequality ``wcd(q, n) >= ||qcent - center_c|| -
        radius_c`` (:class:`~.index.IvfClusters` ``radii``) drops whole
        clusters against t_q — their members are never touched again.
-    3. *wcd*: the centroid bound, only on surviving clusters' members.
-    4. *rwmd*: the tight bound, only on WCD survivors — and only over the
+    3. *pivot* (optional, the cheapest per-doc rung — Werner & Laber,
+       arXiv:1912.00509): ``max_p |d(q, p) - d(n, p)|`` over the
+       ``n_pivots`` reference words frozen at ``build_index``, using the
+       precomputed ``doc_pivot_d`` table — O(P) per pair vs the WCD
+       GEMM's O(w). The reverse triangle inequality makes it a lower
+       bound on WCD, so it inherits WCD's admissibility (and WCD's
+       truncated-iteration caveat) while touching no embeddings. Spelled
+       ``"ivf+pivot+wcd+rwmd"``; requires an index built with
+       ``n_pivots > 0`` (the default).
+    4. *wcd*: the centroid bound, only on surviving clusters' members.
+    5. *rwmd*: the tight bound, only on WCD survivors — and only over the
        vocabulary those survivors actually use, so the min-cdist block
        shrinks from (Q*B, V) to (Q*B, V_survivors)
        (:func:`repro.kernels.rwmd.rwmd_min_cdist_subset`).
@@ -367,9 +420,10 @@ class CascadePruner:
                  nprobe: int | None = None, use_kernel: bool = False,
                  interpret: bool | None = None):
         stages = tuple(stages)
-        if not stages or any(s not in ("wcd", "rwmd") for s in stages):
+        if not stages or any(s not in ("pivot", "wcd", "rwmd")
+                             for s in stages):
             raise ValueError(f"cascade stages must be drawn from "
-                             f"('wcd', 'rwmd'), got {stages!r}")
+                             f"('pivot', 'wcd', 'rwmd'), got {stages!r}")
         self.stages = stages
         self.nprobe = nprobe
         self.use_kernel = use_kernel
@@ -477,21 +531,41 @@ class CascadePruner:
         cl = index.clusters
         radii = cl.radii.astype(np.float32)
         stages = self.stages
-        # dispatch the cluster filter and the (speculative) dense WCD pass
-        # back to back, then sync once — the dense result is discarded in
-        # the rare tight-cluster case where the gather path wins, but the
-        # serial dispatch->sync->dispatch latency it saves dominates its
-        # (Q, N) GEMM cost on every other call
+        # dispatch the cluster filter and the (speculative) dense
+        # first-stage pass back to back, then sync once — the dense result
+        # is discarded in the rare tight-cluster case where the gather
+        # path wins, but the serial dispatch->sync->dispatch latency it
+        # saves dominates its (Q, N) cost on every other call. The pivot
+        # stage gets the same treatment as WCD (its dense pass is O(P)
+        # per pair, cheaper still).
+        qd = None
+        if stages[0] == "pivot":
+            if index.pivots is None:
+                raise ValueError("cascade has a 'pivot' stage but the "
+                                 "index has no pivot words — rebuild with "
+                                 "build_index(n_pivots > 0)")
+            from .index import _pivot_dists
+            qd = _pivot_dists(qcent, index.pivots)
         if pm is None:
             keep_c_dev = _cluster_keep_all(cdists, radii, thresh)
-            keep_d_dev = (_wcd_dense_keep_all(qcent, index.centroids,
-                                              thresh)
-                          if stages[0] == "wcd" else None)
+            if stages[0] == "wcd":
+                keep_d_dev = _wcd_dense_keep_all(qcent, index.centroids,
+                                                 thresh)
+            elif qd is not None:
+                keep_d_dev = _pivot_dense_keep_all(qd, index.doc_pivot_d,
+                                                   thresh)
+            else:
+                keep_d_dev = None
         else:
             keep_c_dev = _cluster_keep_fused(cdists, radii, pm, thresh)
-            keep_d_dev = (_wcd_dense_keep(qcent, index.centroids, pm,
-                                          cl.assign_dev, thresh)
-                          if stages[0] == "wcd" else None)
+            if stages[0] == "wcd":
+                keep_d_dev = _wcd_dense_keep(qcent, index.centroids, pm,
+                                             cl.assign_dev, thresh)
+            elif qd is not None:
+                keep_d_dev = _pivot_dense_keep(qd, index.doc_pivot_d, pm,
+                                               cl.assign_dev, thresh)
+            else:
+                keep_d_dev = None
         keep_c = np.asarray(keep_c_dev)
         kept_docs = int(cl.sizes[keep_c[:cl.n_clusters]].sum())
         if (keep_d_dev is not None
@@ -537,9 +611,19 @@ class CascadePruner:
         slots and per-query non-candidates). One fused dispatch per stage
         (plus the min-cdist producer for RWMD). Pass the ``qcent`` the
         probe already computed to skip recomputing query centroids."""
-        if stage == "wcd":
+        if stage in ("wcd", "pivot"):
             if qcent is None:
                 qcent = _query_centroids(sup, r, mask, index.vecs)
+            if stage == "pivot":
+                if index.pivots is None:
+                    raise ValueError(
+                        "cascade has a 'pivot' stage but the index has no "
+                        "pivot words — rebuild with build_index("
+                        "n_pivots > 0)")
+                from .index import _pivot_dists
+                return _pivot_stage(_pivot_dists(qcent, index.pivots),
+                                    index.doc_pivot_d,
+                                    jnp.asarray(ids_pad), qmask)
             return _wcd_stage(qcent, index.centroids,
                               jnp.asarray(ids_pad), qmask)
         return self._rwmd_subset(index, sup, mask, ids_pad, n_real, qmask)
@@ -590,7 +674,7 @@ class CascadePruner:
 
 
 PRUNERS = ("wcd", "rwmd", "wcd+rwmd", "ivf", "ivf+wcd", "ivf+rwmd",
-           "ivf+wcd+rwmd")
+           "ivf+wcd+rwmd", "ivf+pivot+wcd+rwmd", "ivf+pivot+rwmd")
 
 
 def resolve_pruner(spec, use_kernel: bool = False,
@@ -617,6 +701,11 @@ def resolve_pruner(spec, use_kernel: bool = False,
             elif p == "rwmd":
                 made.append(RwmdPruner(use_kernel=use_kernel,
                                        interpret=interpret))
+            elif p == "pivot":
+                raise ValueError(
+                    "the pivot prestage reads the index's precomputed "
+                    "doc_pivot_d table and runs inside the ivf cascade — "
+                    "spell it 'ivf+pivot+...'")
             else:
                 raise ValueError(
                     f"unknown pruner {p!r}; pick from {PRUNERS} or pass a "

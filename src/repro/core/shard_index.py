@@ -46,6 +46,18 @@ that change are placement (``jax.make_mesh`` over the slice instead of
 host devices) and the host-side staging loop, which should move to
 per-shard async dispatch; the collective inventory (one all-gather per
 search) already fits a pod's latency budget.
+
+Single-shard use runs in-process with no mesh setup (runnable — the CI
+``docs`` job executes this as a doctest)::
+
+    >>> from repro.core import ShardedWmdEngine, shard_corpus
+    >>> from repro.data.corpus import make_corpus
+    >>> c = make_corpus(vocab_size=64, embed_dim=8, n_docs=12,
+    ...                 n_queries=2, words_per_doc=(3, 8), seed=0)
+    >>> sindex = shard_corpus(c.docs, c.vecs, 1, n_clusters=3)
+    >>> engine = ShardedWmdEngine(sindex, lam=2.0, n_iter=10)
+    >>> engine.search(list(c.queries), 3).indices.shape
+    (2, 3)
 """
 from __future__ import annotations
 
@@ -106,7 +118,10 @@ def _index_to_device(index: CorpusIndex, device) -> CorpusIndex:
     return index._replace(
         docs=PaddedDocs(idx=put(index.docs.idx), val=put(index.docs.val)),
         groups=groups, vecs=put(index.vecs), vecs_sq=put(index.vecs_sq),
-        centroids=put(index.centroids), clusters=clusters)
+        centroids=put(index.centroids), clusters=clusters,
+        pivots=None if index.pivots is None else put(index.pivots),
+        doc_pivot_d=(None if index.doc_pivot_d is None
+                     else put(index.doc_pivot_d)))
 
 
 class ShardedCorpusIndex(NamedTuple):
@@ -159,7 +174,8 @@ def _resolve_devices(n_shards: int, devices=None):
 
 def shard_corpus(docs: PaddedDocs, vecs, n_shards: int, dtype=jnp.float32,
                  doc_groups: int = 4, n_clusters=None, ivf_iters: int = 10,
-                 ivf_seed: int = 0, devices=None) -> ShardedCorpusIndex:
+                 ivf_seed: int = 0, devices=None, n_pivots: int = 8,
+                 pivot_seed: int = 0) -> ShardedCorpusIndex:
     """Partition a corpus into cluster-aligned doc shards.
 
     One global mini-batch-Lloyd k-means over the per-doc centroids (the
@@ -174,6 +190,16 @@ def shard_corpus(docs: PaddedDocs, vecs, n_shards: int, dtype=jnp.float32,
     ``n_clusters`` resolves exactly as in :func:`build_index` (int /
     ``None`` = sqrt(N) / ``"auto"`` / numeric string) and is then clamped
     up to ``n_shards`` so every shard can own at least one cluster.
+    ``n_pivots``/``pivot_seed`` flow into each shard's
+    :func:`build_index`: pivot selection is over the REPLICATED
+    vocabulary embeddings, so every shard freezes the identical pivot set
+    and only the per-doc distance tables are shard-local.
+
+    Failure modes: raises :class:`ValueError` when the corpus exceeds the
+    merge's 2^24 float32 id-lane limit, when ``n_docs < n_shards``, or
+    when a shard would own zero docs; raises :class:`RuntimeError` when
+    fewer than ``n_shards`` devices are visible (on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first).
     """
     n_shards = int(n_shards)
     if n_shards < 1:
@@ -227,7 +253,8 @@ def shard_corpus(docs: PaddedDocs, vecs, n_shards: int, dtype=jnp.float32,
         ix = build_index(
             PaddedDocs(idx=idx_np[doc_sel], val=val_np[doc_sel]),
             vecs_np, dtype, doc_groups=doc_groups,
-            clusters=(centers_np[owned], relabel[assign[doc_sel]]))
+            clusters=(centers_np[owned], relabel[assign[doc_sel]]),
+            n_pivots=n_pivots, pivot_seed=pivot_seed)
         shards.append(_index_to_device(ix, devs[s]))
         global_ids.append(doc_sel)
     return ShardedCorpusIndex(
@@ -455,10 +482,12 @@ class ShardedWmdEngine:
         return ids, dist
 
     # -------------------------------------------------------------- search
-    def _shard_search(self, si: int, queries, k, prune, nprobe):
+    def _shard_search(self, si: int, queries, k, prune, nprobe, mode,
+                      refine_factor):
         try:
             return self.engines[si].search(queries, k, prune=prune,
-                                           nprobe=nprobe)
+                                           nprobe=nprobe, mode=mode,
+                                           refine_factor=refine_factor)
         except LamUnderflowError as e:
             raise LamUnderflowError(
                 f"owning shard {si} of {self.n_shards} "
@@ -467,11 +496,20 @@ class ShardedWmdEngine:
             ) from e
 
     def search(self, queries: Sequence, k: int, prune: object = "rwmd",
-               nprobe: int | None = None) -> SearchResult:
+               nprobe: int | None = None, mode: str = "exact",
+               refine_factor: int = 4) -> SearchResult:
         """Sharded staged top-k: per-shard cascade -> single-collective
         global merge. Same contract as :meth:`WmdEngine.search`, with the
         per-shard ``nprobe`` semantics documented in the module header;
-        ``solved`` sums exact per-query solves across shards."""
+        ``solved`` sums exact per-query solves across shards.
+
+        ``mode="refine"`` runs rank-then-refine PER SHARD (each shard
+        ranks its own candidates and solves its own top
+        ``refine_factor * k``); the merge is unchanged — still one
+        all_gather over exact distances, so every returned distance is
+        exact and the global result at a covering ``refine_factor``
+        equals ``mode="exact"`` at the same ``nprobe`` (each shard's
+        contribution already does)."""
         queries = [np.asarray(q) for q in queries]
         nq = len(queries)
         if k <= 0:
@@ -482,7 +520,7 @@ class ShardedWmdEngine:
                                 np.full((0, k), np.nan, self.dtype),
                                 np.zeros(0, np.int64))
         futures = [self._pool.submit(self._shard_search, si, queries, k,
-                                     prune, nprobe)
+                                     prune, nprobe, mode, refine_factor)
                    for si in range(self.n_shards)]
         per_shard = [f.result() for f in futures]
         ids, dist = self._merge_topk(

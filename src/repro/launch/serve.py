@@ -17,6 +17,9 @@ only the surviving candidates, rank):
         --top-k 10 --prune rwmd
     PYTHONPATH=src python -m repro.launch.serve --wmd --n-docs 8192 \
         --top-k 10 --prune ivf+wcd+rwmd --nprobe 8   # sub-O(Q*N) prune
+    PYTHONPATH=src python -m repro.launch.serve --wmd --n-docs 8192 \
+        --top-k 10 --prune ivf+pivot+wcd+rwmd --mode refine \
+        --refine-factor 4      # rank-then-refine: bounded solve budget
 
 Async serving runtime (``--serve``, ISSUE 6): the long-lived front-end —
 deadline-or-full micro-batching, bounded-queue backpressure, tiered
@@ -109,7 +112,8 @@ def serve_wmd(args) -> None:
     def score(batch):
         if args.top_k > 0:
             res = engine.search(batch, args.top_k, prune=prune,
-                                nprobe=nprobe)
+                                nprobe=nprobe, mode=args.mode,
+                                refine_factor=args.refine_factor)
             jax.block_until_ready(res.distances)
             return res
         d = engine.query_batch(batch)
@@ -182,6 +186,9 @@ def serve_wmd(args) -> None:
     if args.top_k > 0:
         rec["top_k"] = args.top_k
         rec["prune"] = args.prune
+        if args.mode != "exact":
+            rec["mode"] = args.mode
+            rec["refine_factor"] = args.refine_factor
         if solved:
             rec["solved_frac"] = round(float(np.mean(solved))
                                        / args.n_docs, 4)
@@ -222,7 +229,8 @@ def serve_async(args) -> None:
         window_s=args.window_ms / 1e3, max_queue=args.max_queue,
         deadline_s=args.deadline_ms / 1e3 if args.deadline_ms > 0 else None,
         prune="rwmd" if args.prune == "none" else args.prune,
-        nprobe=args.nprobe if args.nprobe > 0 else None)
+        nprobe=args.nprobe if args.nprobe > 0 else None,
+        refine_factor=args.refine_factor)
     runtime = ServingRuntime(engine, cfg, injector=injector)
     # warm the compile caches OUTSIDE the measured stream: one dispatch per
     # tier (first-request latency would otherwise be compile time)
@@ -231,7 +239,8 @@ def serve_async(args) -> None:
     for tier in runtime.tiers:
         if tier.solve:
             engine.search(warm, max(1, args.top_k), prune=cfg.prune,
-                          nprobe=tier.nprobe)
+                          nprobe=tier.nprobe, mode=tier.mode,
+                          refine_factor=tier.refine_factor or 4)
         else:
             from repro.runtime.serving import rwmd_topk
             rwmd_topk(engine, warm, max(1, args.top_k))
@@ -273,13 +282,26 @@ def main() -> None:
                          "instead of exhaustive scoring")
     ap.add_argument("--prune", default="rwmd",
                     choices=["none", "wcd", "rwmd", "wcd+rwmd", "ivf+wcd",
-                             "ivf+rwmd", "ivf+wcd+rwmd"],
+                             "ivf+rwmd", "ivf+wcd+rwmd",
+                             "ivf+pivot+wcd+rwmd", "ivf+pivot+rwmd"],
                     help="lower bound / cascade for the prune stage "
-                         "(with --top-k)")
+                         "(with --top-k); 'pivot' rungs read the index's "
+                         "precomputed pivot-word triangle bounds")
     ap.add_argument("--nprobe", type=int, default=0,
                     help="ivf cascades: probe this many clusters per query "
                          "(0 = all = exact top-k; fewer trades recall for "
                          "prune speed)")
+    ap.add_argument("--mode", default="exact",
+                    choices=["exact", "refine"],
+                    help="with --top-k: 'refine' ranks candidates by the "
+                         "cascade's lower bound and Sinkhorn-solves only "
+                         "the top refine-factor*k per query (distances "
+                         "exact, membership approximate; recall measured "
+                         "in fig13)")
+    ap.add_argument("--refine-factor", type=int, default=4,
+                    help="--mode refine: solve budget multiple (k' = "
+                         "refine_factor*k; at a covering factor the "
+                         "result equals the exact path)")
     ap.add_argument("--shards", type=int, default=0,
                     help="> 1: partition the corpus into this many "
                          "cluster-aligned doc shards over a device mesh "

@@ -31,13 +31,19 @@ Admission control & backpressure
 Degradation ladder (cheapest-last)
     1. ``exact``          — full cascade, ``nprobe = all``: exact top-k.
     2. ``reduced_nprobe`` — same cascade, fewer probed clusters:
-       approximate, recall measured monotone in nprobe (fig9).
-    3. ``rwmd``           — rank by the already-computed RWMD lower bound
+       approximate, recall measured monotone in nprobe (fig9). Exists
+       only when the engine's prune spec is an IVF cascade.
+    3. ``refine``         — rank-then-refine (``mode="refine"``): rank
+       every candidate by the cascade's tightest lower bound, Sinkhorn
+       -solve only each query's top ``refine_factor * k`` picks.
+       Distances returned for the reported top-k ARE exact truncated
+       -Sinkhorn scores; only membership is approximate, with recall
+       measured monotone in ``refine_factor`` (fig13).
+    4. ``rwmd``           — rank by the already-computed RWMD lower bound
        with NO Sinkhorn solve (LC-RWMD, Atasu et al. arXiv 1711.07227:
        the relaxed bound is a usable *score*, not just a prune): one
        min-cdist + O(nnz) gather per chunk, returns bound values as
-       distances. Tiers 2-3 exist only when the engine's prune spec is an
-       IVF cascade; otherwise the ladder is exact -> rwmd.
+       distances.
 
 Fault tolerance
     Each dispatch runs under a
@@ -73,6 +79,21 @@ or inside an event loop::
     fut = runtime.submit(query, k=10, deadline_s=0.25)
     resp = await fut          # always resolves; resp.ok or resp.error
     await runtime.stop()
+
+The ladder an engine gets by default (runnable — the CI ``docs`` job
+executes this as a doctest)::
+
+    >>> from repro.core import WmdEngine, build_index
+    >>> from repro.data.corpus import make_corpus
+    >>> from repro.runtime.serving import default_tiers
+    >>> c = make_corpus(vocab_size=64, embed_dim=8, n_docs=12,
+    ...                 n_queries=1, words_per_doc=(3, 8), seed=0)
+    >>> eng = WmdEngine(build_index(c.docs, c.vecs, n_clusters=4),
+    ...                 lam=2.0, n_iter=8)
+    >>> [t.name for t in default_tiers(eng, "ivf+wcd+rwmd")]
+    ['exact', 'reduced_nprobe', 'refine', 'rwmd']
+    >>> [t.name for t in default_tiers(eng, "rwmd")]  # no nprobe knob
+    ['exact', 'refine', 'rwmd']
 """
 from __future__ import annotations
 
@@ -121,17 +142,24 @@ class Tier(NamedTuple):
     nprobe: int | None   # None = all probed clusters (exact cascade)
     solve: bool          # False: rank by the RWMD bound, no Sinkhorn
     caveat: str          # recall semantics, attached to every response
+    mode: str = "exact"  # engine search mode ("exact" | "refine")
+    refine_factor: int | None = None  # solve budget multiple (refine)
 
 
 def default_tiers(engine: WmdEngine, prune: str,
                   nprobe: int | None = None,
-                  nprobe_degraded: int | None = None) -> tuple[Tier, ...]:
-    """The exact -> reduced-nprobe -> rwmd ladder for this engine/prune.
+                  nprobe_degraded: int | None = None,
+                  refine_factor: int = 4) -> tuple[Tier, ...]:
+    """The exact -> reduced-nprobe -> refine -> rwmd ladder for this
+    engine/prune.
 
     ``nprobe`` is the TOP tier's probe count (``None`` = all = exact — a
     caller already serving approximate retrieval starts the ladder
     there); ``nprobe_degraded`` defaults to a quarter of it. Non-IVF
-    prune specs have no nprobe knob, so their ladder is exact -> rwmd.
+    prune specs have no nprobe knob, so their ladder is
+    exact -> refine -> rwmd. ``refine_factor`` sizes the refine tier's
+    solve budget (``refine_factor * k`` Sinkhorn-solved candidates per
+    query).
 
     Works for both the single-device :class:`WmdEngine` and the sharded
     engine (``nprobe`` applies PER SHARD there; the reduced tier's probe
@@ -159,6 +187,15 @@ def default_tiers(engine: WmdEngine, prune: str,
                 + (" per shard" if per_shard else "") + " — "
                 "approximate top-k, recall monotone in nprobe (fig9); "
                 "un-probed clusters are unreachable"))
+    rf = max(1, int(refine_factor))
+    tiers.append(Tier(
+        "refine", nprobe, True,
+        f"degraded: rank-then-refine — candidates ranked by the "
+        f"cascade's lower bound, only the top {rf}*k Sinkhorn-solved "
+        "per query; reported distances are exact truncated-Sinkhorn "
+        "scores but membership is approximate, recall measured "
+        "monotone in refine_factor (fig13)",
+        mode="refine", refine_factor=rf))
     tiers.append(Tier(
         "rwmd", None, False,
         "degraded: ranked by the LC-RWMD lower bound, no Sinkhorn solve "
@@ -342,11 +379,12 @@ class ServeConfig:
     window_s: float = 0.01        # deadline-dispatch trigger (oldest wait)
     max_queue: int = 64           # admission bound: queued + in flight
     deadline_s: float | None = 0.5   # default per-request budget
-    degrade_depth: tuple = (0.5, 0.8)   # queue-depth watermarks (fracs of
-    #                                     max_queue) for tiers 1, 2, ...
+    degrade_depth: tuple = (0.5, 0.75, 0.9)  # queue-depth watermarks
+    #                         (fracs of max_queue) for tiers 1, 2, ...
     prune: str = "ivf+wcd+rwmd"   # solve tiers' prune spec
     nprobe: int | None = None     # top tier (None = all = exact)
     nprobe_degraded: int | None = None  # tier-1 probe count (default /4)
+    refine_factor: int = 4        # refine tier's solve budget multiple
     max_retries: int = 2
     backoff_s: float = 0.02
     jitter: float = 0.25
@@ -374,7 +412,7 @@ class ServingRuntime:
         self.injector = injector
         self.tiers = tuple(tiers) if tiers is not None else default_tiers(
             engine, self.cfg.prune, self.cfg.nprobe,
-            self.cfg.nprobe_degraded)
+            self.cfg.nprobe_degraded, self.cfg.refine_factor)
         self.guard = DispatchGuard(
             max_retries=self.cfg.max_retries, backoff_s=self.cfg.backoff_s,
             jitter=self.cfg.jitter, seed=self.cfg.seed,
@@ -422,7 +460,29 @@ class ServingRuntime:
         rejects immediately with a structured ``rejected_overload``
         response (backpressure — the caller should retry after
         ``retry_after_s``); an empty query is a structured
-        ``empty_query`` error (deterministic, never dispatched)."""
+        ``empty_query`` error (deterministic, never dispatched).
+
+        Exactness contract: the response's ``tier``/``exact``/``caveat``
+        fields say what was served. Only the ``exact`` tier guarantees
+        exact top-k; ``reduced_nprobe`` and ``refine`` return exact
+        truncated-Sinkhorn distances over an approximate candidate set
+        (recall measured in fig9 / fig13 respectively); ``rwmd`` returns
+        admissible lower bounds, not WMD values.
+
+        Failure modes — ``resp.ok == False`` with ``error["code"]`` one
+        of (the future itself NEVER raises):
+
+        - ``rejected_overload``: queue full, retry later (only refusal).
+        - ``empty_query``: query has no support; WMD is undefined.
+        - ``lam_underflow``: deterministic per-request
+          :class:`LamUnderflowError` — K = exp(-lam*M) underflowed for
+          this query; lower ``lam`` or build the engine with
+          ``precision="log"`` (diagnostics attached).
+        - ``poison``: deterministic per-request failure pinned by the
+          isolation path (batchmates still get answers).
+        - ``retries_exhausted``: transient dispatch faults exceeded
+          ``max_retries``.
+        - ``internal``: anything else, as data rather than a crash."""
         loop = asyncio.get_running_loop()
         fut = loop.create_future()
         rid = self._next_rid
@@ -633,8 +693,12 @@ class ServingRuntime:
         self._iters_dropped += self.engine.iter_stats_dropped
         self.engine.reset_iter_stats()    # per-dispatch attribution
         if tier.solve:
+            kw = {}
+            if tier.mode != "exact":
+                kw = {"mode": tier.mode,
+                      "refine_factor": tier.refine_factor or 4}
             res = self.engine.search(queries, kmax, prune=self.cfg.prune,
-                                     nprobe=tier.nprobe)
+                                     nprobe=tier.nprobe, **kw)
             indices, dists = res.indices, res.distances
         else:
             indices, dists = rwmd_topk(self.engine, queries, kmax)
@@ -646,7 +710,8 @@ class ServingRuntime:
             kk = min(req.k, indices.shape[1])
             out[req.rid] = ServeResponse(
                 rid=req.rid, ok=True, tier=tier.name,
-                exact=(tier.solve and tier.nprobe is None),
+                exact=(tier.solve and tier.nprobe is None
+                       and tier.mode == "exact"),
                 caveat=tier.caveat,
                 indices=np.asarray(indices[i][:kk]).tolist(),
                 distances=[round(float(v), 6)

@@ -1,0 +1,178 @@
+"""Property-based oracle layer over rank-then-refine retrieval (ISSUE 8).
+
+In the PR 5 oracle style (``test_properties_search.py``): drive the full
+``WmdEngine.search(mode="refine")`` stack — bound ranking, per-query pick
+sets, union solve with residual scoping, own-picks rank — and assert the
+invariants the mode's contract promises:
+
+- refine == exact at the covering factor (``refine_factor * k >=
+  n_docs``): identical retrieved sets AND distances, on both
+  :class:`WmdEngine` and a 1-shard :class:`ShardedWmdEngine`;
+- recall@k against the exhaustive oracle is monotone non-decreasing in
+  ``refine_factor`` (pick sets are nested by construction);
+- the bench's ``recall_at_k`` (``benchmarks/common.py`` — what fig13
+  records) matches an independent set-based oracle recomputation;
+- ``solved`` reports each query's own pick count, bounded by
+  ``refine_factor * k``;
+- the pivot triangle prestage (``ivf+pivot+...``) is admissible — its
+  bound never exceeds the true centroid distance — and leaves exact
+  search exact;
+- argument validation: refine without a pruner / bad factors / unknown
+  modes raise ``ValueError``.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+``tests/_hypothesis_compat.py`` shim (tier-1). Shapes are constant across
+examples so each property compiles once.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from benchmarks.common import recall_at_k
+from benchmarks.fig8_topk_prune import dedup_corpus
+from repro.core import WmdEngine, build_index
+
+K = 5
+N_DOCS = 64
+PRUNE = "ivf+pivot+wcd+rwmd"
+
+
+def _mk_engine(seed, lam=1.0):
+    corp = dedup_corpus(N_DOCS, vocab=512, embed_dim=16, seed=seed)
+    index = build_index(corp.docs, corp.vecs, n_clusters=8)
+    return WmdEngine(index, lam=lam, n_iter=12), list(corp.queries), corp
+
+
+def _cover(n_docs=N_DOCS, k=K):
+    return -(-n_docs // k)
+
+
+def _oracle_recall(res_idx, truth_idx, k):
+    """Independent recall recomputation: per-query intersection of the
+    plain python id sets, no shared code with benchmarks.common."""
+    total = 0
+    for qi in range(len(truth_idx)):
+        got = {int(i) for i in list(res_idx[qi])[:k]}
+        want = {int(i) for i in list(truth_idx[qi])[:k]}
+        total += len(got & want)
+    return total / (k * len(truth_idx))
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_refine_equals_exact_at_covering_factor(seed):
+    """At ``refine_factor * k >= n_docs`` every query's pick set covers
+    the corpus — refine degenerates to the exact path: same ids, same
+    distances (the refine path's distances are ALWAYS exact truncated-
+    Sinkhorn scores; at covering, membership is exact too)."""
+    eng, qs, _ = _mk_engine(seed)
+    exact = eng.search(qs, K, prune=PRUNE)
+    ref = eng.search(qs, K, prune=PRUNE, mode="refine",
+                     refine_factor=_cover())
+    for qi in range(len(qs)):
+        assert set(ref.indices[qi].tolist()) == \
+            set(exact.indices[qi].tolist())
+        np.testing.assert_allclose(np.sort(ref.distances[qi]),
+                                   np.sort(exact.distances[qi]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_refine_recall_monotone_and_oracle_checked(seed):
+    """Recall@k vs the exhaustive oracle is monotone in refine_factor
+    (nested pick sets), reaches 1.0 at the covering factor, and the
+    bench's ``recall_at_k`` agrees with an independent recomputation at
+    every point of the curve (the fig13 records measure what they say)."""
+    eng, qs, _ = _mk_engine(seed)
+    truth = eng.search(qs, K, prune=None)
+    recalls = []
+    for rf in (1, 2, 4, _cover()):
+        res = eng.search(qs, K, prune=PRUNE, mode="refine",
+                         refine_factor=rf)
+        r_bench = recall_at_k(res.indices, truth.indices, K)
+        r_oracle = _oracle_recall(res.indices, truth.indices, K)
+        assert r_bench == pytest.approx(r_oracle, abs=1e-12)
+        recalls.append(r_bench)
+    assert all(b >= a for a, b in zip(recalls, recalls[1:])), recalls
+    assert recalls[-1] == 1.0, recalls
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_refine_solved_is_own_pick_count(seed):
+    """``solved`` reports the query's OWN rank-selected pick count — at
+    most ``refine_factor * k`` (and never more than the corpus)."""
+    eng, qs, _ = _mk_engine(seed)
+    for rf in (1, 3):
+        res = eng.search(qs, K, prune=PRUNE, mode="refine",
+                         refine_factor=rf)
+        assert (res.solved <= min(rf * K, N_DOCS)).all(), res.solved
+        assert (res.solved > 0).all(), res.solved
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pivot_cascade_keeps_exact_search_exact(seed):
+    """The pivot triangle prestage is a PRUNE, not an approximation: the
+    full cascade with the pivot rung returns the exhaustive result."""
+    eng, qs, _ = _mk_engine(seed)
+    truth = eng.search(qs, K, prune=None)
+    res = eng.search(qs, K, prune=PRUNE)
+    for qi in range(len(qs)):
+        assert set(res.indices[qi].tolist()) == \
+            set(truth.indices[qi].tolist())
+        np.testing.assert_allclose(np.sort(res.distances[qi]),
+                                   np.sort(truth.distances[qi]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pivot_bound_admissible(seed):
+    """Reverse triangle inequality: ``max_p |d(a,p) - d(b,p)| <= d(a,b)``
+    for every (query centroid, doc centroid) pair — the pivot rung's
+    bound never exceeds the true centroid distance it stands in for, so
+    a threshold that admits the true distance admits the bound."""
+    from repro.core.index import _pivot_dists
+    eng, qs, _ = _mk_engine(seed)
+    index = eng.index
+    assert index.pivots is not None and index.doc_pivot_d is not None
+    rng = np.random.default_rng(seed)
+    qcent = np.asarray(index.centroids)[
+        rng.integers(0, index.n_docs, size=3)]
+    qd = np.asarray(_pivot_dists(qcent, index.pivots))
+    dd = np.asarray(index.doc_pivot_d)
+    bound = np.abs(qd[:, None, :] - dd[None, :, :]).max(axis=2)
+    true = np.asarray(_pivot_dists(qcent, index.centroids))
+    assert (bound <= true + 1e-4).all(), float((bound - true).max())
+
+
+def test_refine_argument_validation():
+    eng, qs, _ = _mk_engine(0)
+    with pytest.raises(ValueError, match="refine"):
+        eng.search(qs, K, prune=None, mode="refine")
+    with pytest.raises(ValueError, match="refine_factor"):
+        eng.search(qs, K, prune=PRUNE, mode="refine", refine_factor=0)
+    with pytest.raises(ValueError, match="mode"):
+        eng.search(qs, K, prune=PRUNE, mode="turbo")
+
+
+def test_sharded_refine_covering_equals_exact():
+    """Acceptance: refine is exact-equivalent at the covering factor on
+    the sharded engine too (per-shard refine, merge unchanged) — 1 shard
+    in-process, the multidevice suite covers real meshes."""
+    from repro.core import ShardedWmdEngine, shard_corpus
+    corp = dedup_corpus(N_DOCS, vocab=512, embed_dim=16, seed=3)
+    sindex = shard_corpus(corp.docs, corp.vecs, 1, n_clusters=8)
+    seng = ShardedWmdEngine(sindex, lam=1.0, n_iter=12)
+    qs = list(corp.queries)
+    exact = seng.search(qs, K, prune=PRUNE)
+    ref = seng.search(qs, K, prune=PRUNE, mode="refine",
+                      refine_factor=_cover())
+    for qi in range(len(qs)):
+        assert set(ref.indices[qi].tolist()) == \
+            set(exact.indices[qi].tolist())
+        np.testing.assert_allclose(np.sort(ref.distances[qi]),
+                                   np.sort(exact.distances[qi]),
+                                   rtol=1e-4, atol=1e-5)

@@ -116,16 +116,47 @@ def test_backpressure_rejects_structured(engine, queries):
 # ------------------------------------------------------------ degradation
 def test_tier_ladder_shape(engine):
     tiers = default_tiers(engine, "ivf+wcd+rwmd")
-    assert [t.name for t in tiers] == ["exact", "reduced_nprobe", "rwmd"]
+    assert [t.name for t in tiers] == \
+        ["exact", "reduced_nprobe", "refine", "rwmd"]
     assert tiers[0].nprobe is None and tiers[0].solve
+    assert tiers[0].mode == "exact"
     assert tiers[1].nprobe < engine.index.clusters.n_clusters
-    assert not tiers[2].solve
-    # non-IVF prune: no nprobe knob, ladder skips the middle rung
+    assert tiers[2].solve and tiers[2].mode == "refine"
+    assert tiers[2].refine_factor >= 1
+    assert not tiers[3].solve
+    # non-IVF prune: no nprobe knob, ladder skips the reduced rung
     assert [t.name for t in default_tiers(engine, "rwmd")] == \
-        ["exact", "rwmd"]
+        ["exact", "refine", "rwmd"]
     # caveats name their semantics (they ship in every response)
     assert "exact" in tiers[0].caveat
-    assert "lower bound" in tiers[2].caveat
+    assert "recall" in tiers[2].caveat and "fig13" in tiers[2].caveat
+    assert "lower bound" in tiers[3].caveat
+
+
+def test_refine_tier_response_caveat_and_distances(engine, queries):
+    """A dispatch served at the refine tier tags its responses with the
+    measured-recall caveat, is NOT marked exact, and returns distances
+    matching the engine's own mode='refine' search (exact truncated-
+    Sinkhorn scores over the bound-ranked candidate set)."""
+    rt = ServingRuntime(engine, _cfg())
+    refine_i = next(i for i, t in enumerate(rt.tiers)
+                    if t.name == "refine")
+    tier = rt.tiers[refine_i]
+    req = ServeRequest(rid=0, query=queries[0], k=5, deadline=None,
+                       enqueue_t=time.monotonic(),
+                       v_r=int((queries[0] > 0).sum()))
+    out = rt._score([req], tier)
+    r = out[0]
+    assert r.ok and r.tier == "refine" and not r.exact
+    assert "recall" in r.caveat and "fig13" in r.caveat
+    res = engine.search([queries[0]], 5, prune=rt.cfg.prune,
+                        mode="refine",
+                        refine_factor=tier.refine_factor)
+    assert r.indices == np.asarray(res.indices[0]).tolist()
+    np.testing.assert_allclose(r.distances,
+                               np.asarray(res.distances[0]),
+                               rtol=1e-4, atol=1e-5)
+    assert r.to_json()["caveat"] == tier.caveat
 
 
 def test_choose_tier_orders_by_queue_depth(engine):

@@ -1,0 +1,121 @@
+"""Docs gate (CI ``docs`` job): runnable examples + intra-repo links.
+
+Two checks, both fail-loud:
+
+1. **Doctests** — the module-level examples on the documented public API
+   surface (``repro.core.index``, ``repro.core.prune``,
+   ``repro.core.shard_index``, ``repro.runtime.serving``) are executed
+   with :mod:`doctest`. A documented example that no longer runs is docs
+   drift, the exact failure mode this job exists to catch.
+2. **Intra-repo links** — every relative markdown link (and anchor) in
+   ``docs/*.md`` and ``README.md`` must resolve to a real file; anchors
+   (``file.md#section``) must match a heading in the target. External
+   ``http(s)://`` links are not fetched (CI offline-safety), only
+   well-formedness is required.
+
+Run it the way CI does::
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DOCTEST_MODULES = (
+    "repro.core.index",
+    "repro.core.prune",
+    "repro.core.shard_index",
+    "repro.runtime.serving",
+)
+
+MD_FILES = ("README.md", "docs/architecture.md", "docs/tuning.md")
+
+_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, spaces -> dashes, drop
+    punctuation (the subset our headings actually use)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set[str]:
+    out = set()
+    in_fence = False
+    for line in md_path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+        elif not in_fence and line.startswith("#"):
+            out.add(_slug(line.lstrip("#")))
+    return out
+
+
+def check_links() -> list[str]:
+    errors = []
+    for rel in MD_FILES:
+        md = REPO / rel
+        if not md.is_file():
+            errors.append(f"{rel}: file missing")
+            continue
+        text = md.read_text()
+        # strip fenced code blocks — diagram/shell content is not links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = md if not path_part else \
+                (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if _slug(anchor) not in _anchors(dest):
+                    errors.append(
+                        f"{rel}: broken anchor -> {target} "
+                        f"(no heading '#{anchor}' in {dest.name})")
+    return errors
+
+
+def check_doctests() -> list[str]:
+    errors = []
+    for name in DOCTEST_MODULES:
+        mod = importlib.import_module(name)
+        res = doctest.testmod(mod, verbose=False,
+                              optionflags=doctest.ELLIPSIS)
+        print(f"doctest {name}: {res.attempted} examples, "
+              f"{res.failed} failed")
+        if res.failed:
+            errors.append(f"{name}: {res.failed} doctest failure(s)")
+        elif res.attempted == 0:
+            errors.append(f"{name}: no doctest examples found "
+                          "(documented example removed?)")
+    return errors
+
+
+def main() -> int:
+    errors = check_links()
+    for e in errors:
+        print(f"LINK  {e}")
+    doc_errors = check_doctests()
+    for e in doc_errors:
+        print(f"DOCTEST  {e}")
+    errors += doc_errors
+    if errors:
+        print(f"\ndocs gate FAILED: {len(errors)} error(s)")
+        return 1
+    print("docs gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
