@@ -51,6 +51,15 @@ def compare(
 ) -> list[str]:
     """Return the list of gating regressions (empty = pass)."""
     failures = []
+    # a gate prefix matching NO current record means the benchmark never
+    # ran (skipped step, renamed record, typo'd prefix) — warn loudly so
+    # a silently-dead gate doesn't read as a pass
+    for p in list(prefixes) + list(min_prefixes):
+        if not any(name.startswith(p) for name in current):
+            print(
+                f"warning: gate prefix '{p}' matches no current record — "
+                f"that benchmark did not run or was renamed"
+            )
     for name in sorted(current):
         if name not in baseline or baseline[name] <= 0:
             continue
@@ -87,6 +96,8 @@ def main(argv=None) -> int:
             "fig11.wall",
             "fig12.p50_low",
             "fig13.wall",
+            "fig14.p50",
+            "fig14.recovery_s",
         ],
         help="bench-name prefixes that gate (others are informational)",
     )

@@ -1,7 +1,7 @@
 """Core library: the paper's contribution as composable JAX modules."""
 from .index import (CorpusIndex, DocGroup, IvfClusters, SearchResult,
                     WmdEngine, append_docs, auto_n_clusters, bucket_size,
-                    build_index, default_n_clusters)
+                    build_index, default_n_clusters, load_index, save_index)
 from .prune import (PRUNERS, CascadePruner, MaxPruner, Pruner, RwmdPruner,
                     WcdPruner, resolve_pruner)
 from .sinkhorn import (LamUnderflowError, cdist, precompute, select_support,
@@ -14,16 +14,18 @@ from .sinkhorn_sparse import (SolvePrecision, precompute_sparse,
 from .sparse import (BlockSparse, PaddedDocs, block_density,
                      block_sparse_from_dense, padded_docs_from_dense,
                      padded_docs_from_lists, padded_docs_to_dense)
-from .shard_index import (ShardedCorpusIndex, ShardedWmdEngine,
+from .shard_index import (ShardCoverage, ShardSearchError,
+                          ShardedCorpusIndex, ShardedWmdEngine,
                           append_docs_sharded, bin_pack_clusters,
-                          count_collectives, shard_corpus)
+                          count_collectives, restore_shard, shard_corpus,
+                          snapshot_shards)
 from .wmd import IMPLS, many_to_many, one_to_many, search
 from .router import route, sinkhorn_route, topk_route
 
 __all__ = [
     "CorpusIndex", "DocGroup", "IvfClusters", "SearchResult", "WmdEngine",
     "append_docs", "auto_n_clusters", "bucket_size", "build_index",
-    "default_n_clusters",
+    "default_n_clusters", "load_index", "save_index",
     "PRUNERS", "CascadePruner", "MaxPruner", "Pruner", "RwmdPruner",
     "WcdPruner", "resolve_pruner", "LamUnderflowError",
     "cdist", "precompute", "select_support", "sinkhorn_wmd_dense",
@@ -33,7 +35,9 @@ __all__ = [
     "BlockSparse", "PaddedDocs", "block_density", "block_sparse_from_dense",
     "padded_docs_from_dense", "padded_docs_from_lists",
     "padded_docs_to_dense", "IMPLS", "many_to_many", "one_to_many", "search",
+    "ShardCoverage", "ShardSearchError",
     "ShardedCorpusIndex", "ShardedWmdEngine", "append_docs_sharded",
-    "bin_pack_clusters", "count_collectives", "shard_corpus",
+    "bin_pack_clusters", "count_collectives", "restore_shard",
+    "shard_corpus", "snapshot_shards",
     "route", "sinkhorn_route", "topk_route",
 ]

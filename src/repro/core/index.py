@@ -92,6 +92,7 @@ fp32 ``exp(-lam*M)`` underflows first and the engine raises
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import NamedTuple, Sequence
 
 import numpy as np
@@ -384,6 +385,19 @@ class CorpusIndex(NamedTuple):
     def embed_dim(self) -> int:
         return self.vecs.shape[1]
 
+    def save(self, path) -> None:
+        """Persist this index to one integrity-checksummed ``.npz`` file
+        (see :func:`save_index`). ``CorpusIndex.load(path)`` round-trips
+        it bit-compatibly — the shard-recovery snapshot primitive."""
+        save_index(self, path)
+
+    @staticmethod
+    def load(path) -> "CorpusIndex":
+        """Rebuild an index from a :meth:`save` snapshot (see
+        :func:`load_index`); raises ``ValueError`` if the checksum or
+        format version does not match."""
+        return load_index(path)
+
     def to_external(self, storage_ids: np.ndarray) -> np.ndarray:
         """Storage ids -> the caller's original doc ids."""
         storage_ids = np.asarray(storage_ids, np.int32)
@@ -563,6 +577,37 @@ def _assemble_index(idx_np, val_np, centroids_np, vecs, centers, assign,
     remap = np.empty_like(perm)
     remap[perm] = np.arange(perm.size, dtype=np.int32)
 
+    groups = _nnz_groups(idx_np, val_np, doc_groups)
+    centroids = jnp.asarray(centroids_np)
+    c_order, c_starts = _membership(assign, n_clusters)
+    radii = _cluster_radii(centroids, centers, assign, n_clusters)
+    pivots = doc_pivot_d = None
+    if n_pivots and int(n_pivots) > 0:
+        pivots = _select_pivots(vecs, int(n_pivots), seed=pivot_seed)
+        doc_pivot_d = _pivot_dists(centroids, pivots)
+    return CorpusIndex(docs=PaddedDocs(idx=jnp.asarray(idx_np),
+                                       val=jnp.asarray(val_np)),
+                       groups=groups, vecs=vecs,
+                       vecs_sq=jnp.sum(vecs * vecs, axis=1),
+                       centroids=centroids,
+                       docs_host=PaddedDocs(idx=idx_np, val=val_np),
+                       clusters=IvfClusters(centers=centers, assign=assign,
+                                            order=c_order, starts=c_starts,
+                                            radii=radii,
+                                            assign_dev=jnp.asarray(assign)),
+                       ext_ids=ext_ids, remap=remap,
+                       pivots=pivots, doc_pivot_d=doc_pivot_d)
+
+
+def _nnz_groups(idx_np, val_np, doc_groups: int) -> tuple:
+    """nnz-sorted, width-trimmed :class:`DocGroup` split of an ELL corpus.
+
+    Shared by :func:`_assemble_index` and :func:`load_index`: the split is
+    a pure function of (idx, val, doc_groups), so a snapshot only needs to
+    persist the full ELL arrays plus the GROUP COUNT to reconstruct the
+    groups bit-identically (``g = ceil(n/k)`` is an involution on its
+    image: rebuilding with ``doc_groups = len(groups)`` reproduces the
+    build-time group size exactly)."""
     nnz = (val_np > 0).sum(1)
     order = np.argsort(nnz, kind="stable")
     n = max(1, len(order))
@@ -576,25 +621,108 @@ def _assemble_index(idx_np, val_np, centroids_np, vecs, centers, assign,
             docs=PaddedDocs(idx=jnp.asarray(idx_np[sel][:, :lg]),
                             val=jnp.asarray(val_np[sel][:, :lg])),
             cols=jnp.asarray(sel.astype(np.int32))))
-    centroids = jnp.asarray(centroids_np)
-    c_order, c_starts = _membership(assign, n_clusters)
-    radii = _cluster_radii(centroids, centers, assign, n_clusters)
+    return tuple(groups)
+
+
+INDEX_SNAPSHOT_VERSION = 1
+
+
+def snapshot_checksum(arrays: dict) -> int:
+    """CRC32 over every array's name, dtype, shape, and bytes (key-sorted)
+    — the integrity tag :func:`load_index` verifies before trusting a
+    snapshot. Not cryptographic; it catches truncated/garbled files, not
+    adversarial tampering."""
+    crc = 0
+    for name in sorted(arrays):
+        a = np.ascontiguousarray(arrays[name])
+        hdr = f"{name}:{a.dtype.str}:{a.shape}".encode()
+        crc = zlib.crc32(a.tobytes(), zlib.crc32(hdr, crc))
+    return crc
+
+
+def save_index(index: CorpusIndex, path) -> None:
+    """Persist a frozen :class:`CorpusIndex` to one ``.npz`` file.
+
+    Saves only the HOST-canonical arrays (ELL docs, embeddings, cluster
+    membership/radii, ext_ids/remap, pivots) plus the group count;
+    everything else — device uploads, ``vecs_sq``, the nnz group split —
+    is a deterministic pure function of those and is recomputed on
+    :func:`load_index`, which is what makes restore-then-search
+    bit-compatible with build-then-search. The payload is tagged with
+    :func:`snapshot_checksum`; ``load_index`` refuses a mismatch."""
+    idx_np = np.asarray(index.docs_host.idx)
+    val_np = np.asarray(index.docs_host.val)
+    arrays = {
+        "idx": idx_np,
+        "val": val_np,
+        "vecs": np.asarray(index.vecs),
+        "centroids": np.asarray(index.centroids),
+        "n_groups": np.asarray(len(index.groups), np.int64),
+        "version": np.asarray(INDEX_SNAPSHOT_VERSION, np.int64),
+    }
+    if index.clusters is not None:
+        arrays["c_centers"] = np.asarray(index.clusters.centers)
+        arrays["c_assign"] = np.asarray(index.clusters.assign)
+        arrays["c_order"] = np.asarray(index.clusters.order)
+        arrays["c_starts"] = np.asarray(index.clusters.starts)
+        arrays["c_radii"] = np.asarray(index.clusters.radii)
+    if index.ext_ids is not None:
+        arrays["ext_ids"] = np.asarray(index.ext_ids)
+        arrays["remap"] = np.asarray(index.remap)
+    if index.pivots is not None:
+        arrays["pivots"] = np.asarray(index.pivots)
+        arrays["doc_pivot_d"] = np.asarray(index.doc_pivot_d)
+    # checksum covers everything ABOVE (computed before its own insertion)
+    arrays["checksum"] = np.asarray(snapshot_checksum(arrays), np.uint32)
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+
+
+def load_index(path) -> CorpusIndex:
+    """Rebuild a :class:`CorpusIndex` from a :func:`save_index` snapshot.
+
+    Verifies the integrity checksum first (raises ``ValueError`` on
+    mismatch — a half-written snapshot must not silently serve wrong
+    results), then re-uploads the host arrays and re-derives the pure
+    functions of them (``vecs_sq``, nnz groups, device mirrors). The
+    result is bit-compatible with the index that was saved: identical
+    host arrays in, identical derivations out."""
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+    stored = int(data.pop("checksum"))
+    actual = snapshot_checksum(data)
+    if actual != stored:
+        raise ValueError(
+            f"index snapshot {path!r} failed its integrity check "
+            f"(stored crc32 {stored:#010x}, recomputed {actual:#010x}) — "
+            "refusing to serve from a corrupt/truncated snapshot")
+    version = int(data["version"])
+    if version != INDEX_SNAPSHOT_VERSION:
+        raise ValueError(f"index snapshot {path!r} has version {version}; "
+                         f"this build reads {INDEX_SNAPSHOT_VERSION}")
+    idx_np = data["idx"]
+    val_np = data["val"]
+    vecs = jnp.asarray(data["vecs"])
+    clusters = None
+    if "c_centers" in data:
+        clusters = IvfClusters(
+            centers=jnp.asarray(data["c_centers"]),
+            assign=data["c_assign"], order=data["c_order"],
+            starts=data["c_starts"], radii=data["c_radii"],
+            assign_dev=jnp.asarray(data["c_assign"]))
     pivots = doc_pivot_d = None
-    if n_pivots and int(n_pivots) > 0:
-        pivots = _select_pivots(vecs, int(n_pivots), seed=pivot_seed)
-        doc_pivot_d = _pivot_dists(centroids, pivots)
-    return CorpusIndex(docs=PaddedDocs(idx=jnp.asarray(idx_np),
-                                       val=jnp.asarray(val_np)),
-                       groups=tuple(groups), vecs=vecs,
-                       vecs_sq=jnp.sum(vecs * vecs, axis=1),
-                       centroids=centroids,
-                       docs_host=PaddedDocs(idx=idx_np, val=val_np),
-                       clusters=IvfClusters(centers=centers, assign=assign,
-                                            order=c_order, starts=c_starts,
-                                            radii=radii,
-                                            assign_dev=jnp.asarray(assign)),
-                       ext_ids=ext_ids, remap=remap,
-                       pivots=pivots, doc_pivot_d=doc_pivot_d)
+    if "pivots" in data:
+        pivots = jnp.asarray(data["pivots"])
+        doc_pivot_d = jnp.asarray(data["doc_pivot_d"])
+    return CorpusIndex(
+        docs=PaddedDocs(idx=jnp.asarray(idx_np), val=jnp.asarray(val_np)),
+        groups=_nnz_groups(idx_np, val_np, int(data["n_groups"])),
+        vecs=vecs, vecs_sq=jnp.sum(vecs * vecs, axis=1),
+        centroids=jnp.asarray(data["centroids"]),
+        docs_host=PaddedDocs(idx=idx_np, val=val_np),
+        clusters=clusters,
+        ext_ids=data.get("ext_ids"), remap=data.get("remap"),
+        pivots=pivots, doc_pivot_d=doc_pivot_d)
 
 
 def _pad_width(a, width: int):

@@ -62,8 +62,10 @@ Single-shard use runs in-process with no mesh setup (runnable — the CI
 from __future__ import annotations
 
 import functools
+import os
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutTimeout
 from typing import NamedTuple, Sequence
 
 import jax
@@ -73,9 +75,12 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.runtime.fault_tolerance import PoisonStep, ShardHealth
+
 from .index import (CorpusIndex, SearchResult, WmdEngine, _assign_clusters,
                     _compact_slots, _doc_centroids, _kmeans, append_docs,
-                    auto_n_clusters, build_index, default_n_clusters)
+                    auto_n_clusters, build_index, default_n_clusters,
+                    load_index, save_index, snapshot_checksum)
 from .sinkhorn import LamUnderflowError
 from .sparse import PaddedDocs
 
@@ -303,6 +308,124 @@ def append_docs_sharded(sindex: ShardedCorpusIndex, new_docs: PaddedDocs,
                               owner_new.astype(np.int32)]))
 
 
+class ShardSearchError(Exception):
+    """Structured shard fan-out failure, naming the shard(s) involved.
+
+    Raised when a shard's dispatch exhausts its retry budget (per-shard
+    structured error, the fan-out analogue of the underflow diagnostics
+    that already name the owning shard), or by the fan-out itself when
+    EVERY shard failed and there is nothing to merge. Deliberately NOT a
+    ``RuntimeError``: the serving ``DispatchGuard`` classifies
+    RuntimeError as transient-and-retryable, and a fan-out that already
+    consumed its own per-shard retries must not be retried again
+    upstream (the ``DispatchFailed`` convention)."""
+
+    def __init__(self, message: str, shard_reasons: dict | None = None):
+        super().__init__(message)
+        self.shard_reasons = dict(shard_reasons or {})
+
+
+class ShardCoverage(NamedTuple):
+    """How much of the corpus a sharded result actually covers.
+
+    ``fraction == 1.0`` (empty ``missing_shards``) means every shard
+    contributed and the usual exactness contract holds; anything less is
+    a PARTIAL result — still a true top-k over the responding shards'
+    docs, but recall against the full corpus is bounded above by
+    ``fraction`` and the serving layer must not claim exactness."""
+
+    fraction: float          # covered docs / corpus docs
+    covered_docs: int
+    missing_shards: tuple    # shard ids that did not contribute
+    reasons: dict            # {shard id: "timeout" | "open_circuit" | error}
+
+    @property
+    def full(self) -> bool:
+        return not self.missing_shards
+
+
+# ----------------------------------------------------------------- snapshots
+_SHARD_META_FILE = "meta.npz"
+
+
+def _shard_file(shard_id: int) -> str:
+    return f"shard_{shard_id:04d}.npz"
+
+
+def snapshot_shards(sindex: ShardedCorpusIndex, snapshot_dir) -> list:
+    """Persist a sharded index: one :func:`repro.core.index.save_index`
+    file per shard plus a checksummed ``meta.npz`` holding the mesh-level
+    state (owner map, global centers, cluster->shard map, per-shard
+    global ids). Recovery granularity is ONE shard:
+    :func:`restore_shard` reloads a single dead shard's file and rejoins
+    it to the live mesh without touching the survivors. Returns the
+    written paths."""
+    os.makedirs(snapshot_dir, exist_ok=True)
+    paths = []
+    for si, ix in enumerate(sindex.shards):
+        p = os.path.join(snapshot_dir, _shard_file(si))
+        save_index(ix, p)
+        paths.append(p)
+    meta = {
+        "owner": np.asarray(sindex.owner),
+        "centers": np.asarray(sindex.centers),
+        "shard_of_cluster": np.asarray(sindex.shard_of_cluster),
+        "n_shards": np.asarray(sindex.n_shards, np.int64),
+    }
+    for si, gids in enumerate(sindex.global_ids):
+        meta[f"global_ids_{si}"] = np.asarray(gids)
+    meta["checksum"] = np.asarray(snapshot_checksum(meta), np.uint32)
+    mp = os.path.join(snapshot_dir, _SHARD_META_FILE)
+    with open(mp, "wb") as f:
+        np.savez(f, **meta)
+    paths.append(mp)
+    return paths
+
+
+def restore_shard(sindex: ShardedCorpusIndex, shard_id: int,
+                  snapshot_dir) -> ShardedCorpusIndex:
+    """Dead-shard recovery: reload shard ``shard_id`` from its
+    :func:`snapshot_shards` file, commit it to the shard's mesh device,
+    and return the sharded index with that shard replaced.
+
+    Validates before trusting: the meta checksum must verify, the
+    snapshot's shard count must match the live mesh, and the snapshot's
+    global-id set for this shard must equal the live one — a snapshot
+    taken before an :func:`append_docs_sharded` is STALE for the grown
+    shard and restoring it would silently drop documents, so that is a
+    ``ValueError``, not a best-effort merge. Restore-then-search is
+    bit-compatible with never-failed search (``load_index`` reconstructs
+    the identical index; property-tested at ``nprobe=None``)."""
+    si = int(shard_id)
+    with np.load(os.path.join(snapshot_dir, _SHARD_META_FILE)) as z:
+        meta = {k: z[k] for k in z.files}
+    stored = int(meta.pop("checksum"))
+    actual = snapshot_checksum(meta)
+    if actual != stored:
+        raise ValueError(
+            f"sharded snapshot meta in {snapshot_dir!r} failed its "
+            f"integrity check (stored crc32 {stored:#010x}, recomputed "
+            f"{actual:#010x})")
+    snap_shards = int(meta["n_shards"])
+    if snap_shards != sindex.n_shards:
+        raise ValueError(f"snapshot has {snap_shards} shards; live mesh "
+                         f"has {sindex.n_shards}")
+    if not 0 <= si < sindex.n_shards:
+        raise ValueError(f"shard id {si} out of range "
+                         f"[0, {sindex.n_shards})")
+    gids = meta[f"global_ids_{si}"]
+    if not np.array_equal(gids, sindex.global_ids[si]):
+        raise ValueError(
+            f"snapshot for shard {si} is STALE: it covers {gids.size} "
+            f"docs but the live shard owns {sindex.global_ids[si].size} "
+            f"(the corpus grew since the snapshot; re-snapshot after "
+            f"append_docs_sharded)")
+    ix = load_index(os.path.join(snapshot_dir, _shard_file(si)))
+    ix = _index_to_device(ix, sindex.devices[si])
+    shards = sindex.shards[:si] + (ix,) + sindex.shards[si + 1:]
+    return sindex._replace(shards=shards)
+
+
 # --------------------------------------------------------------- collectives
 # NOTE: shard_map's `pbroadcast` is deliberately absent — it is the
 # replication-rule annotation (identity at lowering), not communication
@@ -381,11 +504,41 @@ class ShardedWmdEngine:
     plus sharding extras (``n_shards``, ``docs_per_shard``,
     ``cluster_counts``, ``iter_stats_by_shard``).
 
+    Fault tolerance (ISSUE 9): the fan-out is deadline-bounded and
+    health-gated. Each shard dispatch runs under a per-shard retry loop
+    (``shard_retries`` transient retries with exponential backoff); the
+    collection waits at most ``shard_timeout_s`` wall-clock for the whole
+    fan-out; a shard that times out or errors is EXCLUDED from the merge
+    — the packed ``(S, Q, 2k)`` tensor's +inf/-1 defaults make a missing
+    shard's lane inert, so the collective itself is unchanged — and the
+    result is tagged via ``last_coverage`` (a :class:`ShardCoverage`)
+    with the covered doc fraction and the missing shard ids. A
+    :class:`~repro.runtime.fault_tolerance.ShardHealth` breaker skips a
+    consecutively-failing shard and probes it on a deterministic cadence;
+    ``snapshot()``/``restore_shard()`` persist and recover shards via
+    :func:`snapshot_shards`/:func:`restore_shard` (restore-then-search is
+    bit-compatible with never-failed search). ``last_coverage`` is a
+    plain attribute handoff: safe under the serving runtime, which
+    serializes engine dispatches on one worker thread.
+
+    Deterministic per-request failures (``LamUnderflowError``) are NOT
+    shard faults: they re-raise unchanged (naming the owning shard) so
+    the serving layer can isolate the poisoned request. ``query_batch``
+    is the unguarded debugging path and keeps the bare fan-out.
+
     Accepts every :class:`WmdEngine` keyword and forwards it per shard.
     """
 
-    def __init__(self, sindex: ShardedCorpusIndex, **engine_kwargs):
+    def __init__(self, sindex: ShardedCorpusIndex, *,
+                 shard_timeout_s: float | None = 30.0,
+                 shard_retries: int = 1, shard_backoff_s: float = 0.01,
+                 fail_threshold: int = 3, probe_every: int = 4,
+                 snapshot_dir: str | None = None,
+                 shard_fault_hook=None, **engine_kwargs):
         self.sindex = sindex
+        # kept for shard recovery: a restored shard's WmdEngine must be
+        # rebuilt with the exact hyperparameters of its dead predecessor
+        self._engine_kwargs = dict(engine_kwargs)
         self.engines = tuple(WmdEngine(ix, **engine_kwargs)
                              for ix in sindex.shards)
         e0 = self.engines[0]
@@ -399,6 +552,20 @@ class ShardedWmdEngine:
         # collective-overhead accounting for the fig11 trajectory note:
         # wall seconds spent in the merge step (pack + collective + sync)
         self.merge_seconds = 0.0
+        self.shard_timeout_s = shard_timeout_s
+        self.shard_retries = max(0, int(shard_retries))
+        self.shard_backoff_s = float(shard_backoff_s)
+        self.health = ShardHealth(sindex.n_shards,
+                                  fail_threshold=fail_threshold,
+                                  probe_every=probe_every)
+        self.snapshot_dir = snapshot_dir
+        # fault-injection entry point (shard, fan-out seq, attempt) ->
+        # None, run inside the per-shard retry region; the serving
+        # runtime wires FaultInjector.before_shard_attempt here
+        self.shard_fault_hook = shard_fault_hook
+        self.fanouts = 0       # fan-out sequence counter (public: chaos
+        #                        drills key crash windows off it)
+        self.last_coverage = ShardCoverage(1.0, sindex.n_docs, (), {})
 
     # ------------------------------------------------------------- surface
     @property
@@ -455,16 +622,20 @@ class ShardedWmdEngine:
                 self.sindex.mesh, self.n_shards, k)
         return fn
 
-    def _merge_topk(self, per_shard, nq: int, k: int):
-        """Pack per-shard ``(indices, distances)`` host results into the
-        (S, Q, 2k) mesh tensor and run the single-collective merge.
-        Returns host (Q, k) indices (int32, -1 pad) and distances
-        (NaN pad), ascending."""
+    def _merge_topk(self, per_shard: dict, nq: int, k: int):
+        """Pack per-shard ``{shard id: (indices, distances)}`` host
+        results into the (S, Q, 2k) mesh tensor and run the
+        single-collective merge. A shard ABSENT from the dict (timed
+        out, errored, open-circuited) leaves its lane at the +inf/-1
+        defaults — inert under ``top_k`` — so a partial merge uses the
+        identical collective as a full one (the dead shard's DEVICE is
+        alive; only its dispatch failed). Returns host (Q, k) indices
+        (int32, -1 pad) and distances (NaN pad), ascending."""
         t0 = time.perf_counter()
         s_count = self.n_shards
         packed = np.full((s_count, nq, 2 * k), np.inf, np.float32)
         packed[:, :, k:] = -1.0
-        for si, (ids, dists) in enumerate(per_shard):
+        for si, (ids, dists) in per_shard.items():
             ks = ids.shape[1]
             gids = np.where(
                 ids >= 0,
@@ -495,6 +666,104 @@ class ShardedWmdEngine:
                 f"are shard-local, reported ids are external): {e}"
             ) from e
 
+    def _guarded_shard(self, si: int, seq: int, fn):
+        """One shard's dispatch under its DispatchGuard-style retry loop
+        (runs on the shard's pool thread). Transient failures — the same
+        class set :class:`~repro.runtime.fault_tolerance.StepGuard`
+        retries — back off exponentially up to ``shard_retries`` times;
+        deterministic per-request failures (``LamUnderflowError``,
+        ``PoisonStep``) re-raise immediately; exhaustion raises a
+        structured :class:`ShardSearchError` NAMING THE SHARD instead of
+        letting the raw exception propagate unstructured out of the
+        future. Returns ``(service_seconds, result)``."""
+        last = None
+        for attempt in range(self.shard_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                if self.shard_fault_hook is not None:
+                    self.shard_fault_hook(si, seq, attempt)
+                return time.perf_counter() - t0, fn(si)
+            except (PoisonStep, FloatingPointError):
+                raise          # deterministic per-request: never a retry
+            except (jax.errors.JaxRuntimeError, RuntimeError, OSError) as e:
+                last = e
+                if attempt < self.shard_retries:
+                    time.sleep(self.shard_backoff_s * (2 ** attempt))
+        raise ShardSearchError(
+            f"shard {si} of {self.n_shards} failed after "
+            f"{self.shard_retries + 1} attempts "
+            f"({type(last).__name__}: {last})",
+            {si: f"{type(last).__name__}: {last}"}) from last
+
+    def _fan_out(self, fn, label: str):
+        """Deadline-bounded, health-gated fan-out of ``fn(si)`` across
+        shards. Returns ``({shard id: result}, ShardCoverage)`` and
+        updates ``last_coverage``/``health``.
+
+        Admission: open-circuited shards are skipped (probed on the
+        breaker's deterministic cadence); if EVERY circuit is open, all
+        shards are force-probed — the engine never refuses to serve on
+        breaker state alone. Collection: one shared wall-clock deadline
+        of ``shard_timeout_s`` over the whole fan-out; a shard that
+        misses it is recorded as ``"timeout"`` and excluded (its worker
+        thread finishes in the background — a cooperative bound, like
+        the DispatchGuard watchdog: Python cannot preempt a running XLA
+        dispatch). A ``LamUnderflowError`` from any shard re-raises
+        after the others drain (deterministic per-request poison, not a
+        shard fault). Raises :class:`ShardSearchError` only when NO
+        shard responded."""
+        seq = self.fanouts
+        self.fanouts += 1
+        reasons: dict = {}
+        live = []
+        for si in range(self.n_shards):
+            if self.health.admit(si):
+                live.append(si)
+            else:
+                reasons[si] = "open_circuit"
+        if not live:                     # all circuits open: force-probe
+            live = sorted(reasons)
+            reasons = {}
+        futures = {si: self._pool.submit(self._guarded_shard, si, seq, fn)
+                   for si in live}
+        deadline = (None if self.shard_timeout_s is None
+                    else time.monotonic() + self.shard_timeout_s)
+        results: dict = {}
+        underflow = None
+        for si, f in futures.items():
+            try:
+                remaining = (None if deadline is None
+                             else max(0.0, deadline - time.monotonic()))
+                dt, out = f.result(timeout=remaining)
+                results[si] = out
+                self.health.record_success(si, dt)
+            except _FutTimeout:
+                reasons[si] = "timeout"
+                self.health.record_failure(si)
+            except LamUnderflowError as e:
+                underflow = e
+            except Exception as e:  # noqa: BLE001 — fan-out boundary
+                reasons[si] = (str(e) if isinstance(e, ShardSearchError)
+                               else f"{type(e).__name__}: {e}")
+                self.health.record_failure(si)
+        if underflow is not None:
+            raise underflow
+        if not results:
+            detail = "; ".join(f"shard {s}: {r}"
+                               for s, r in sorted(reasons.items()))
+            raise ShardSearchError(
+                f"{label}: all {self.n_shards} shards failed ({detail})",
+                reasons)
+        covered = sum(self.docs_per_shard[si] for si in results)
+        cov = ShardCoverage(
+            fraction=covered / max(self.n_docs, 1),
+            covered_docs=covered,
+            missing_shards=tuple(si for si in range(self.n_shards)
+                                 if si not in results),
+            reasons=reasons)
+        self.last_coverage = cov
+        return results, cov
+
     def search(self, queries: Sequence, k: int, prune: object = "rwmd",
                nprobe: int | None = None, mode: str = "exact",
                refine_factor: int = 4) -> SearchResult:
@@ -509,23 +778,30 @@ class ShardedWmdEngine:
         all_gather over exact distances, so every returned distance is
         exact and the global result at a covering ``refine_factor``
         equals ``mode="exact"`` at the same ``nprobe`` (each shard's
-        contribution already does)."""
+        contribution already does).
+
+        Under shard failure the result is PARTIAL: a true top-k over the
+        responding shards only, reported via ``last_coverage`` (see
+        :meth:`_fan_out`); callers that need the exactness contract must
+        check ``last_coverage.full``."""
         queries = [np.asarray(q) for q in queries]
         nq = len(queries)
         if k <= 0:
             raise ValueError(f"k must be positive, got {k}")
         k = min(int(k), self.n_docs)
         if nq == 0:
+            self.last_coverage = ShardCoverage(1.0, self.n_docs, (), {})
             return SearchResult(np.full((0, k), -1, np.int32),
                                 np.full((0, k), np.nan, self.dtype),
                                 np.zeros(0, np.int64))
-        futures = [self._pool.submit(self._shard_search, si, queries, k,
-                                     prune, nprobe, mode, refine_factor)
-                   for si in range(self.n_shards)]
-        per_shard = [f.result() for f in futures]
+        results, _ = self._fan_out(
+            lambda si: self._shard_search(si, queries, k, prune, nprobe,
+                                          mode, refine_factor),
+            label="search")
         ids, dist = self._merge_topk(
-            [(res.indices, res.distances) for res in per_shard], nq, k)
-        solved = np.sum([res.solved for res in per_shard], axis=0)
+            {si: (res.indices, res.distances)
+             for si, res in results.items()}, nq, k)
+        solved = np.sum([res.solved for res in results.values()], axis=0)
         return SearchResult(ids, dist, solved.astype(np.int64))
 
     def query_batch(self, queries: Sequence) -> np.ndarray:
@@ -548,16 +824,49 @@ class ShardedWmdEngine:
         engine, merged through the same single collective as
         :meth:`search`. Returns ``(indices, distances)`` exactly like the
         single-device free function (which delegates here when handed a
-        sharded engine)."""
+        sharded engine). Routed through the same deadline-bounded
+        health-gated fan-out as :meth:`search`, so the last-resort tier
+        degrades to a partial result (``last_coverage``) under shard
+        failure instead of stalling on a hung shard."""
         from repro.runtime.serving import rwmd_topk as _local_rwmd
         queries = [np.asarray(q) for q in queries]
         nq = len(queries)
         k = min(int(k), self.n_docs)
         if nq == 0 or k <= 0:
+            self.last_coverage = ShardCoverage(1.0, self.n_docs, (), {})
             return (np.full((nq, max(k, 0)), -1, np.int32),
                     np.full((nq, max(k, 0)), np.nan, self.dtype))
-        futures = [self._pool.submit(_local_rwmd, self.engines[si],
-                                     queries, k)
-                   for si in range(self.n_shards)]
-        per_shard = [f.result() for f in futures]
-        return self._merge_topk(per_shard, nq, k)
+        results, _ = self._fan_out(
+            lambda si: _local_rwmd(self.engines[si], queries, k),
+            label="rwmd_topk")
+        return self._merge_topk(dict(results), nq, k)
+
+    # ----------------------------------------------------------- snapshots
+    def snapshot(self, snapshot_dir=None) -> list:
+        """Persist every shard's index (see :func:`snapshot_shards`) and
+        remember the directory for :meth:`restore_shard`. Returns the
+        written paths."""
+        d = snapshot_dir if snapshot_dir is not None else self.snapshot_dir
+        if d is None:
+            raise ValueError("no snapshot directory: pass snapshot_dir "
+                             "here or at engine construction")
+        self.snapshot_dir = d
+        return snapshot_shards(self.sindex, d)
+
+    def restore_shard(self, shard_id: int, snapshot_dir=None) -> None:
+        """Dead-shard recovery: reload one shard from its snapshot
+        (:func:`restore_shard`), rebuild its :class:`WmdEngine` with the
+        same hyperparameters, and reset its circuit breaker — the
+        restored shard rejoins the mesh with a clean record and is
+        admitted on the next fan-out. Post-restore search is
+        bit-compatible with a never-failed engine."""
+        d = snapshot_dir if snapshot_dir is not None else self.snapshot_dir
+        if d is None:
+            raise ValueError("no snapshot directory: pass snapshot_dir "
+                             "here or at engine construction")
+        si = int(shard_id)
+        self.sindex = restore_shard(self.sindex, si, d)
+        rebuilt = WmdEngine(self.sindex.shards[si], **self._engine_kwargs)
+        self.engines = (self.engines[:si] + (rebuilt,)
+                        + self.engines[si + 1:])
+        self.health.reset(si)

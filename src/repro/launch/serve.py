@@ -31,6 +31,19 @@ prints one JSON line per request plus a summary record:
     PYTHONPATH=src python -m repro.launch.serve --wmd --serve \
         --requests 64 --rate 200 --inject-transient-rate 0.2 \
         --inject-poison-rate 0.05 --inject-seed 3     # chaos drill
+
+Shard-level fault tolerance (ISSUE 9): with ``--shards N --serve`` the
+fan-out is deadline-bounded (``--shard-timeout-ms``) and shard-site
+faults can be injected (``--inject-shard-crash`` etc.); responses
+covering fewer docs than the full corpus are tagged ``partial`` with
+honest coverage. ``--snapshot-dir`` writes per-shard snapshots after
+warmup so a dead shard can be restored bit-compatibly. SIGTERM/SIGINT
+drain the admission queue (graceful shutdown) instead of dropping
+in-flight work:
+    PYTHONPATH=src python -m repro.launch.serve --wmd --serve --shards 2 \
+        --n-docs 2048 --top-k 10 --requests 64 --shard-timeout-ms 2000 \
+        --inject-shard-crash 1 --inject-shard-crash-after 8 \
+        --snapshot-dir /tmp/wmd-snap
 """
 from __future__ import annotations
 
@@ -87,7 +100,11 @@ def _build_wmd_engine(args, corpus):
         ensure_host_devices(args.shards)
         sindex = shard_corpus(corpus.docs, corpus.vecs, args.shards,
                               n_clusters=args.n_clusters)
-        return ShardedWmdEngine(sindex, **kw)
+        timeout = getattr(args, "shard_timeout_ms", 0.0)
+        return ShardedWmdEngine(
+            sindex,
+            shard_timeout_s=timeout / 1e3 if timeout > 0 else None,
+            snapshot_dir=getattr(args, "snapshot_dir", None), **kw)
     from repro.core import WmdEngine, build_index
     # corpus side frozen ONCE; every request after this touches only its
     # own (v_r, ...) slice of work ('auto'/numeric strings parsed by
@@ -218,12 +235,20 @@ def serve_async(args) -> None:
     engine = _build_wmd_engine(args, corpus)
     injector = None
     if args.inject_latency_rate or args.inject_transient_rate \
-            or args.inject_poison_rate:
+            or args.inject_poison_rate or args.inject_shard_latency_rate \
+            or args.inject_shard_transient_rate \
+            or args.inject_shard_crash >= 0:
         injector = FaultInjector(
             latency_rate=args.inject_latency_rate,
             latency_s=args.inject_latency_ms / 1e3,
             transient_rate=args.inject_transient_rate,
-            poison_rate=args.inject_poison_rate, seed=args.inject_seed)
+            poison_rate=args.inject_poison_rate,
+            shard_latency_rate=args.inject_shard_latency_rate,
+            shard_latency_s=args.inject_shard_latency_ms / 1e3,
+            shard_transient_rate=args.inject_shard_transient_rate,
+            crash_shard=args.inject_shard_crash,
+            crash_after=args.inject_shard_crash_after,
+            seed=args.inject_seed)
     cfg = ServeConfig(
         max_batch=max(1, args.batch_queries),
         window_s=args.window_ms / 1e3, max_queue=args.max_queue,
@@ -245,11 +270,18 @@ def serve_async(args) -> None:
             from repro.runtime.serving import rwmd_topk
             rwmd_topk(engine, warm, max(1, args.top_k))
     engine.reset_iter_stats()
+    if args.snapshot_dir and hasattr(engine, "snapshot"):
+        # take the recovery snapshot AFTER warmup so a mid-stream
+        # restore_shard() rejoins with compile caches already primed
+        engine.snapshot()
     n = max(1, args.requests)
     queries = [next(reqs) for _ in range(n)]
     arrivals = poisson_arrivals(n, rate_per_s=args.rate, seed=1)
+    # handle_signals: SIGTERM/SIGINT drain the admission queue instead of
+    # killing in-flight futures — late arrivals get `shutting_down`
     responses, stats = run_open_loop(runtime, queries, arrivals,
-                                     k=max(1, args.top_k))
+                                     k=max(1, args.top_k),
+                                     handle_signals=True)
     for r in responses:
         print(json.dumps(r.to_json()))
     lat = np.asarray([r.queue_ms + r.service_ms for r in responses
@@ -366,6 +398,31 @@ def main() -> None:
                          "poison request (isolated, structured error)")
     ap.add_argument("--inject-seed", type=int, default=0,
                     help="fault injection: deterministic replay seed")
+    ap.add_argument("--shard-timeout-ms", type=float, default=30000.0,
+                    help="sharded fan-out (--shards > 1): per-dispatch "
+                         "deadline; shards that miss it are excluded from "
+                         "the merge and the response is tagged partial "
+                         "(0 = wait forever)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="sharded engine: write per-shard snapshots here "
+                         "after warmup; restore_shard() rebuilds a dead "
+                         "shard from them (bit-compatible at nprobe=None)")
+    ap.add_argument("--inject-shard-latency-rate", type=float, default=0.0,
+                    help="fault injection: per-shard-attempt probability "
+                         "of added latency inside the fan-out")
+    ap.add_argument("--inject-shard-latency-ms", type=float, default=50.0)
+    ap.add_argument("--inject-shard-transient-rate", type=float,
+                    default=0.0,
+                    help="fault injection: per-shard-attempt probability "
+                         "of a transient failure (burns a shard retry)")
+    ap.add_argument("--inject-shard-crash", type=int, default=-1,
+                    help="fault injection: crash this shard id on every "
+                         "attempt from --inject-shard-crash-after "
+                         "onwards (-1 = off); responses go partial with "
+                         "honest coverage until the shard is restored")
+    ap.add_argument("--inject-shard-crash-after", type=int, default=0,
+                    help="fan-out sequence number the crash window "
+                         "opens at")
     ap.add_argument("--n-docs", type=int, default=1024)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--embed-dim", type=int, default=64)

@@ -21,6 +21,13 @@ manual intervention. The pieces:
                     deterministic per-request failures the serving runtime
                     isolates into structured error responses rather than
                     retrying or letting them kill the coalesced batch.
+``ShardHealth``   — per-shard circuit breaker for the sharded fan-out
+                    (ISSUE 9): consecutive-failure counts open a shard's
+                    circuit, a deterministic probe cadence re-admits it,
+                    and per-shard service-time EMAs feed the coverage
+                    accounting. No randomness anywhere — a chaos drill
+                    replays the same skip/probe/re-admit sequence from
+                    the same fault schedule.
 ``Heartbeat``     — per-host step-time EMA; quorum straggler detection (a
                     host slower than median * threshold for N consecutive
                     steps is flagged for eviction — on real fleets this feeds
@@ -223,6 +230,104 @@ class Heartbeat:
             else:
                 self._strikes[host] = 0
         return out
+
+
+@dataclass
+class ShardHealth:
+    """Deterministic per-shard circuit breaker (ISSUE 9).
+
+    Drives the sharded engine's fan-out admission: a shard that fails
+    ``fail_threshold`` consecutive dispatches has its circuit OPENED and
+    is skipped (its docs drop out of coverage); every ``probe_every``-th
+    skipped fan-out the shard is probed — one real dispatch — and a
+    successful probe closes the circuit and re-admits it. The cadence is
+    a pure counter, not a timer or a random draw, so a chaos drill with
+    a fixed fault schedule replays the identical skip/probe/re-admit
+    sequence every run.
+
+    Also keeps a service-time EMA per shard (successful dispatches only)
+    — the fan-out's analogue of :class:`Heartbeat` lanes — exposed via
+    :meth:`stats` for the serving runtime's observability surface.
+    """
+
+    n_shards: int
+    fail_threshold: int = 3
+    probe_every: int = 4
+    ema_alpha: float = 0.3
+
+    def __post_init__(self):
+        n = self.n_shards
+        self._consecutive = [0] * n
+        self._open = [False] * n
+        self._skips = [0] * n
+        self._ema: dict = {}
+        self.failures = [0] * n      # total failed dispatches per shard
+        self.successes = [0] * n
+        self.probes = [0] * n        # dispatches admitted through an open circuit
+        self.opened = [0] * n        # times the circuit tripped open
+
+    def admit(self, shard: int) -> bool:
+        """Should this fan-out dispatch to ``shard``? Closed circuit:
+        always. Open circuit: every ``probe_every``-th call (a probe)."""
+        if not self._open[shard]:
+            return True
+        self._skips[shard] += 1
+        if self._skips[shard] % self.probe_every == 0:
+            self.probes[shard] += 1
+            return True
+        return False
+
+    def record_success(self, shard: int, service_s: float) -> None:
+        """A dispatch answered: reset strikes, close the circuit (a
+        successful probe re-admits the shard), update the EMA."""
+        self.successes[shard] += 1
+        self._consecutive[shard] = 0
+        self._open[shard] = False
+        self._skips[shard] = 0
+        prev = self._ema.get(shard, service_s)
+        self._ema[shard] = (1 - self.ema_alpha) * prev \
+            + self.ema_alpha * service_s
+
+    def record_failure(self, shard: int) -> None:
+        """A dispatch timed out or errored: one strike; at
+        ``fail_threshold`` consecutive strikes the circuit opens."""
+        self.failures[shard] += 1
+        self._consecutive[shard] += 1
+        if self._consecutive[shard] >= self.fail_threshold \
+                and not self._open[shard]:
+            self._open[shard] = True
+            self._skips[shard] = 0
+            self.opened[shard] += 1
+
+    def reset(self, shard: int) -> None:
+        """Forget a shard's history — called after snapshot restore
+        rejoins it to the mesh (the restored shard is a new process;
+        its predecessor's strikes are not its own)."""
+        self._consecutive[shard] = 0
+        self._open[shard] = False
+        self._skips[shard] = 0
+        self._ema.pop(shard, None)
+
+    def is_open(self, shard: int) -> bool:
+        return self._open[shard]
+
+    @property
+    def open_shards(self) -> tuple:
+        return tuple(i for i in range(self.n_shards) if self._open[i])
+
+    def ema(self, shard: int) -> float | None:
+        """Smoothed service time for one shard (None before first success)."""
+        return self._ema.get(shard)
+
+    def stats(self) -> dict:
+        return {
+            "open": list(self.open_shards),
+            "failures": list(self.failures),
+            "successes": list(self.successes),
+            "probes": list(self.probes),
+            "opened": list(self.opened),
+            "ema_s": {s: round(v, 6) for s, v in sorted(self._ema.items())},
+        }
 
 
 def elastic_mesh(n_devices: int, model_parallel: int = 16,

@@ -58,6 +58,20 @@ Fault tolerance
     errors, never an unhandled exception: every submitted request's
     future resolves to a :class:`ServeResponse`.
 
+Shard-level fault tolerance (ISSUE 9)
+    A sharded engine additionally degrades ACROSS SHARDS: its fan-out is
+    deadline-bounded and circuit-broken
+    (:class:`~repro.core.shard_index.ShardedWmdEngine`), and when a shard
+    misses its deadline or is open-circuited the dispatch still answers —
+    a PARTIAL result over the responding shards, tagged on the response
+    with ``partial``/``coverage``/``missing_shards``, its caveat extended
+    with the covered fraction, and ``exact`` forced ``False`` (an
+    exact-mode response must never silently claim exactness when
+    coverage < 1). Only an all-shards failure becomes a structured
+    ``shard_failed`` error. :meth:`ServingRuntime.request_shutdown`
+    drains gracefully on SIGTERM/SIGINT: admitted requests resolve, the
+    rest get structured ``shutting_down`` rejections.
+
 ``FaultInjector``
     Seeded, deterministic chaos hooks so the degradation/retry paths are
     *tested*, not just written: stage latency, transient dispatch faults,
@@ -108,6 +122,7 @@ import numpy as np
 import jax
 
 from repro.core.index import WmdEngine, bucket_size
+from repro.core.shard_index import ShardSearchError
 from repro.core.sinkhorn import LamUnderflowError
 from repro.runtime.fault_tolerance import (DispatchFailed, DispatchGuard,
                                            Heartbeat, PoisonStep)
@@ -238,6 +253,9 @@ class ServeResponse:
     straggler: bool = False       # dispatch tripped the watchdog
     solve_iters: dict | None = None   # per-stage mean realized iterations
     iter_stats_dropped: int = 0   # engine ring discards, cumulative
+    partial: bool = False         # a shard missed: result covers < 100%
+    coverage: float | None = None     # covered corpus fraction if partial
+    missing_shards: list | None = None  # shard ids absent from the merge
 
     def to_json(self) -> dict:
         d = {"rid": self.rid, "ok": self.ok, "tier": self.tier,
@@ -257,6 +275,10 @@ class ServeResponse:
             d["straggler"] = True
         if self.iter_stats_dropped:
             d["iter_stats_dropped"] = self.iter_stats_dropped
+        if self.partial:
+            d["partial"] = True
+            d["coverage"] = self.coverage
+            d["missing_shards"] = self.missing_shards
         return d
 
 
@@ -280,6 +302,14 @@ class InjectedFault(RuntimeError):
     """Injected transient dispatch failure (classified retryable)."""
 
 
+class ShardCrashed(RuntimeError):
+    """Injected shard crash: the shard 'process' is down, so EVERY
+    attempt against it fails (a RuntimeError, so the shard-level retry
+    loop burns its budget and the circuit opens) until the injector's
+    :meth:`FaultInjector.revive_shard` ends the outage — the chaos
+    drill's stand-in for kill + snapshot-restore."""
+
+
 @dataclass
 class FaultInjector:
     """Seeded, deterministic chaos hooks for the serving runtime.
@@ -296,6 +326,18 @@ class FaultInjector:
     :class:`PoisonRequest` for them, driving the per-request isolation
     path. All decisions are pure functions of ``(seed, site)``; ``trace``
     records them for the replay-determinism test.
+
+    Shard-granular sites (ISSUE 9): ``before_shard_attempt(shard, seq,
+    attempt)`` runs inside the sharded engine's per-shard retry region
+    (wired automatically by :class:`ServingRuntime` when the engine
+    exposes ``shard_fault_hook``) — shard latency/hang (site 4; sized
+    above the shard timeout it becomes a hang that the fan-out deadline
+    converts to a ``"timeout"`` exclusion), shard transients (site 5),
+    and a deterministic CRASH WINDOW: ``crash_shard`` fails every
+    attempt from fan-out ``crash_after`` for ``crash_for`` fan-outs
+    (``0`` = until :meth:`revive_shard`). The crash is keyed on the
+    engine's fan-out sequence counter, so "kill shard 1 two dispatches
+    in" replays exactly.
     """
 
     latency_rate: float = 0.0
@@ -303,6 +345,13 @@ class FaultInjector:
     transient_rate: float = 0.0
     transient_attempts: int = 1
     poison_rate: float = 0.0
+    shard_latency_rate: float = 0.0
+    shard_latency_s: float = 0.05
+    shard_transient_rate: float = 0.0
+    shard_transient_attempts: int = 1
+    crash_shard: int = -1         # shard id to crash (-1 = none)
+    crash_after: int = 0          # fan-out sequence where the crash begins
+    crash_for: int = 0            # crashed fan-outs (0 = until revive)
     seed: int = 0
     trace: list = field(default_factory=list)
 
@@ -327,6 +376,38 @@ class FaultInjector:
             raise InjectedFault(
                 f"injected transient fault (dispatch {dispatch_id} "
                 f"attempt {attempt})")
+
+    def before_shard_attempt(self, shard: int, seq: int,
+                             attempt: int) -> None:
+        """Shard-granular chaos entry point (see class docstring); runs
+        on the shard's fan-out worker thread, inside its retry loop."""
+        if shard == self.crash_shard and seq >= self.crash_after and (
+                self.crash_for <= 0
+                or seq < self.crash_after + self.crash_for):
+            self.trace.append(("shard_crash", shard, seq, attempt))
+            raise ShardCrashed(
+                f"injected crash: shard {shard} is down "
+                f"(fan-out {seq} attempt {attempt})")
+        if self.shard_latency_rate > 0 and \
+                _unit_draw(self.seed, 4, shard, seq, attempt) \
+                < self.shard_latency_rate:
+            self.trace.append(("shard_latency", shard, seq, attempt))
+            time.sleep(self.shard_latency_s)
+        if self.shard_transient_rate > 0 \
+                and attempt < self.shard_transient_attempts \
+                and _unit_draw(self.seed, 5, shard, seq, attempt) \
+                < self.shard_transient_rate:
+            self.trace.append(("shard_transient", shard, seq, attempt))
+            raise InjectedFault(
+                f"injected shard transient (shard {shard} "
+                f"fan-out {seq} attempt {attempt})")
+
+    def revive_shard(self) -> None:
+        """End the crash window — the drill's 'shard host came back'
+        moment (snapshot restore then rejoins it to the mesh)."""
+        if self.crash_shard >= 0:
+            self.trace.append(("shard_revive", self.crash_shard))
+        self.crash_shard = -1
 
 
 # ----------------------------------------------------------- degraded tier
@@ -427,10 +508,17 @@ class ServingRuntime:
         self._next_rid = 0
         self._next_dispatch = 0
         self._iters_dropped = 0       # engine ring discards, accumulated
+        self._closing = False         # graceful-drain flag (ISSUE 9)
         self.counters = {
             "submitted": 0, "rejected": 0, "dispatches": 0, "errors": 0,
-            "isolations": 0, "deadline_missed": 0,
+            "isolations": 0, "deadline_missed": 0, "partial": 0,
+            "shutdown_rejected": 0,
             "tiers": {t.name: 0 for t in self.tiers}}
+        # wire the injector's shard-granular sites into a sharded
+        # engine's fan-out (duck-typed: any engine exposing the hook)
+        if injector is not None \
+                and getattr(engine, "shard_fault_hook", ...) is None:
+            engine.shard_fault_hook = injector.before_shard_attempt
 
     # ------------------------------------------------------------ control
     async def start(self) -> None:
@@ -451,6 +539,21 @@ class ServingRuntime:
             await asyncio.gather(*list(self._tasks))
         self._pool.shutdown(wait=True)
         self._coalescer = None
+
+    def request_shutdown(self) -> None:
+        """Begin a graceful drain (SIGTERM/SIGINT handler): everything
+        already admitted still coalesces, dispatches, and resolves;
+        every LATER :meth:`submit` gets an immediate structured
+        ``shutting_down`` rejection instead of being admitted.
+        Synchronous and idempotent — safe to install directly as an
+        asyncio signal handler. The actual teardown stays with
+        :meth:`stop` (the driver calls it after the drained futures
+        resolve and then emits the final stats JSON)."""
+        self._closing = True
+
+    @property
+    def closing(self) -> bool:
+        return self._closing
 
     # ------------------------------------------------------------- submit
     def submit(self, query, k: int = 10,
@@ -473,6 +576,9 @@ class ServingRuntime:
         of (the future itself NEVER raises):
 
         - ``rejected_overload``: queue full, retry later (only refusal).
+        - ``shutting_down``: the runtime is draining after
+          :meth:`request_shutdown`; already-admitted requests still
+          resolve, this one was not admitted.
         - ``empty_query``: query has no support; WMD is undefined.
         - ``lam_underflow``: deterministic per-request
           :class:`LamUnderflowError` — K = exp(-lam*M) underflowed for
@@ -482,6 +588,11 @@ class ServingRuntime:
           isolation path (batchmates still get answers).
         - ``retries_exhausted``: transient dispatch faults exceeded
           ``max_retries``.
+        - ``shard_failed``: every responding shard of a sharded engine
+          failed this dispatch (per-shard reasons in diagnostics). A
+          PARTIAL shard failure is not an error: the response is served
+          with ``partial=True``, its covered-fraction/missing-shard
+          tags, and ``exact=False``.
         - ``internal``: anything else, as data rather than a crash."""
         loop = asyncio.get_running_loop()
         fut = loop.create_future()
@@ -496,6 +607,13 @@ class ServingRuntime:
             rid=rid, query=q, k=int(k),
             deadline=None if deadline_s is None else now + deadline_s,
             enqueue_t=now, v_r=int((q > 0).sum()), future=fut)
+        if self._closing:
+            self.counters["shutdown_rejected"] += 1
+            fut.set_result(_error_response(
+                req, "shutting_down",
+                "runtime is draining for shutdown; request not admitted "
+                "(already-admitted requests still resolve)"))
+            return fut
         if req.v_r == 0:
             fut.set_result(_error_response(
                 req, "empty_query",
@@ -599,6 +717,8 @@ class ServingRuntime:
                 self.counters["deadline_missed"] += 1
             if resp.ok:
                 self.counters["tiers"][resp.tier] += 1
+                if resp.partial:
+                    self.counters["partial"] += 1
             self._depth -= 1
             if not req.future.done():
                 req.future.set_result(resp)
@@ -681,6 +801,12 @@ class ServingRuntime:
             return _error_response(req, "poison", str(e))
         if isinstance(e, DispatchFailed):
             return _error_response(req, "retries_exhausted", str(e))
+        if isinstance(e, ShardSearchError):
+            return _error_response(
+                req, "shard_failed",
+                "sharded fan-out failed on every responding shard "
+                "(shard-level retries already exhausted; not retried "
+                "upstream)", diagnostics=str(e))
         return _error_response(req, "internal",
                                f"{type(e).__name__}: {e}")
 
@@ -702,6 +828,21 @@ class ServingRuntime:
             indices, dists = res.indices, res.distances
         else:
             indices, dists = rwmd_topk(self.engine, queries, kmax)
+        # coverage accounting (ISSUE 9): a sharded engine reports how
+        # much of the corpus this call actually touched. Race-free read:
+        # dispatches are serialized on ONE worker thread, so the
+        # attribute handoff pairs with the search that just ran.
+        cov = getattr(self.engine, "last_coverage", None)
+        partial = bool(cov is not None and cov.missing_shards)
+        caveat = tier.caveat
+        if partial:
+            detail = ", ".join(f"{s}: {r}" for s, r
+                               in sorted(cov.reasons.items()))
+            caveat = (
+                f"{caveat}; PARTIAL: shard(s) "
+                f"{list(cov.missing_shards)} missing ({detail}) — "
+                f"covers {cov.fraction:.2%} of the corpus; recall vs "
+                f"the full corpus is bounded above by that fraction")
         iters = {st: round(float(arr.mean()), 2)
                  for st, arr in self.engine.iter_stats_by_stage().items()
                  if arr.size}
@@ -710,13 +851,20 @@ class ServingRuntime:
             kk = min(req.k, indices.shape[1])
             out[req.rid] = ServeResponse(
                 rid=req.rid, ok=True, tier=tier.name,
+                # a partial result must NEVER claim exactness, whatever
+                # the tier says: coverage < 1 caps recall below 1
                 exact=(tier.solve and tier.nprobe is None
-                       and tier.mode == "exact"),
-                caveat=tier.caveat,
+                       and tier.mode == "exact" and not partial),
+                caveat=caveat,
                 indices=np.asarray(indices[i][:kk]).tolist(),
                 distances=[round(float(v), 6)
                            for v in np.asarray(dists[i][:kk])],
-                solve_iters=iters or None)
+                solve_iters=iters or None,
+                partial=partial,
+                coverage=(round(float(cov.fraction), 4) if partial
+                          else None),
+                missing_shards=(list(cov.missing_shards) if partial
+                                else None))
         return out
 
     # -------------------------------------------------------------- stats
@@ -738,6 +886,9 @@ class ServingRuntime:
             c["shards"] = int(shards)
             c["docs_per_shard"] = [int(n) for n in
                                    self.engine.docs_per_shard]
+        health = getattr(self.engine, "health", None)
+        if health is not None:
+            c["shard_health"] = health.stats()
         return c
 
 
@@ -751,24 +902,49 @@ def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0) -> np.ndarray:
 
 def run_open_loop(runtime: ServingRuntime, queries: Sequence,
                   arrivals_s: Sequence[float], k: int = 10,
-                  deadline_s: float | None = ...) :
+                  deadline_s: float | None = ...,
+                  handle_signals: bool = False):
     """Drive the runtime open-loop: request ``i`` is submitted at offset
     ``arrivals_s[i]`` REGARDLESS of completions (offered load is the
     independent variable — queueing delay shows up in the latency tail,
     exactly what the fig12 sweep measures). Returns ``(responses,
     stats)`` with responses in submission order; every submission
     resolves (result or structured error) — an unhandled exception here
-    is a runtime bug, and the chaos gate treats it as such."""
+    is a runtime bug, and the chaos gate treats it as such.
+
+    ``handle_signals=True`` installs SIGTERM/SIGINT handlers that call
+    :meth:`ServingRuntime.request_shutdown` (graceful drain): the
+    remaining arrivals submit immediately — resolving as structured
+    ``shutting_down`` rejections — already-admitted requests dispatch
+    and resolve normally, and the function still returns ``(responses,
+    stats)`` so the driver can emit its final stats JSON instead of
+    dying mid-dispatch. No-op on platforms without
+    ``loop.add_signal_handler``."""
     async def _go():
         await runtime.start()
-        t0 = time.monotonic()
-        futs = []
-        for q, at in zip(queries, arrivals_s):
-            delay = t0 + float(at) - time.monotonic()
-            if delay > 0:
-                await asyncio.sleep(delay)
-            futs.append(runtime.submit(q, k=k, deadline_s=deadline_s))
-        out = await asyncio.gather(*futs)
-        await runtime.stop()
+        loop = asyncio.get_running_loop()
+        installed = []
+        if handle_signals:
+            import signal as _signal
+            for sig in (_signal.SIGINT, _signal.SIGTERM):
+                try:
+                    loop.add_signal_handler(sig, runtime.request_shutdown)
+                    installed.append(sig)
+                except (NotImplementedError, RuntimeError):
+                    pass
+        try:
+            t0 = time.monotonic()
+            futs = []
+            for q, at in zip(queries, arrivals_s):
+                if not runtime.closing:
+                    delay = t0 + float(at) - time.monotonic()
+                    if delay > 0:
+                        await asyncio.sleep(delay)
+                futs.append(runtime.submit(q, k=k, deadline_s=deadline_s))
+            out = await asyncio.gather(*futs)
+            await runtime.stop()
+        finally:
+            for sig in installed:
+                loop.remove_signal_handler(sig)
         return list(out), runtime.stats()
     return asyncio.run(_go())

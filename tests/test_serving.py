@@ -348,3 +348,30 @@ def test_responses_carry_observability(engine, queries):
         assert key in stats
     assert stats["dispatches"] >= 1
     assert stats["tier_ema_s"]      # EMA recorded for the served tier
+
+
+# ----------------------------------------------------- graceful shutdown
+def test_graceful_shutdown_drains_and_rejects(engine, queries):
+    """``request_shutdown()`` (the SIGTERM/SIGINT path): already-admitted
+    requests drain to real answers; requests arriving after the flag get
+    a structured ``shutting_down`` rejection — nothing hangs, nothing is
+    silently dropped (ISSUE 9 satellite)."""
+    rt = ServingRuntime(engine, _cfg(max_batch=2, window_s=0.01))
+
+    async def go():
+        await rt.start()
+        before = [rt.submit(q, k=5) for q in [queries[0], queries[0]]]
+        rt.request_shutdown()
+        assert rt.closing
+        rt.request_shutdown()               # idempotent
+        after = rt.submit(queries[1], k=5)
+        out = await asyncio.gather(*before, after)
+        await rt.stop()
+        return list(out)
+
+    resps = asyncio.run(go())
+    assert all(r.ok for r in resps[:2])     # admitted work still answered
+    late = resps[2]
+    assert not late.ok and late.error["code"] == "shutting_down"
+    stats = rt.stats()
+    assert stats["shutdown_rejected"] == 1

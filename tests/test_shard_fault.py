@@ -1,0 +1,346 @@
+"""Shard-level fault-tolerance tests (ISSUE 9): the circuit breaker's
+deterministic cadence, snapshot save/load integrity + bit-compatible
+restore, structured fan-out failures, timeout-driven circuit opening and
+probe re-admission, and the serving runtime's partial-coverage tagging.
+
+Everything here runs on the single real CPU device with a 1-shard
+``ShardedWmdEngine`` (the fan-out/health/snapshot machinery is identical
+at any shard count); the true multi-device partial-merge paths live in
+``tests/test_shard_index.py``'s subprocess scripts."""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ShardCoverage, ShardSearchError, ShardedWmdEngine,
+                        SearchResult, WmdEngine, append_docs_sharded,
+                        build_index, load_index, save_index, shard_corpus)
+from repro.runtime.fault_tolerance import ShardHealth
+from repro.runtime.serving import (FaultInjector, ServeConfig, ServeRequest,
+                                   ServingRuntime)
+
+LAM = 1.0
+N_ITER = 10
+PRUNE = "rwmd"
+
+
+@pytest.fixture()
+def sharded_engine(small_corpus):
+    sindex = shard_corpus(small_corpus.docs, small_corpus.vecs, 1,
+                          n_clusters=8)
+    return ShardedWmdEngine(sindex, lam=LAM, n_iter=N_ITER,
+                            shard_retries=1, shard_backoff_s=0.001)
+
+
+def _dist_equal(a, b) -> bool:
+    return np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True)
+
+
+# -------------------------------------------------------- circuit breaker
+def test_health_opens_at_consecutive_threshold():
+    h = ShardHealth(2, fail_threshold=3)
+    for _ in range(2):
+        h.record_failure(0)
+    assert not h.is_open(0)
+    h.record_success(0, 0.01)          # success resets the strike count
+    for _ in range(2):
+        h.record_failure(0)
+    assert not h.is_open(0)
+    h.record_failure(0)
+    assert h.is_open(0) and h.opened[0] == 1
+    assert h.open_shards == (0,)
+    assert not h.is_open(1)            # per-shard state, not global
+
+
+def test_health_probe_cadence_is_deterministic():
+    h = ShardHealth(1, fail_threshold=1, probe_every=3)
+    h.record_failure(0)
+    admits = [h.admit(0) for _ in range(6)]
+    assert admits == [False, False, True, False, False, True]
+    assert h.probes[0] == 2
+
+
+def test_health_successful_probe_closes_circuit():
+    h = ShardHealth(1, fail_threshold=1, probe_every=1)
+    h.record_failure(0)
+    assert h.is_open(0) and h.admit(0)     # probe admitted
+    h.record_success(0, 0.02)
+    assert not h.is_open(0)
+    assert all(h.admit(0) for _ in range(4))
+
+
+def test_health_ema_reset_and_stats():
+    h = ShardHealth(2, ema_alpha=0.5)
+    assert h.ema(0) is None
+    h.record_success(0, 0.1)
+    assert h.ema(0) == pytest.approx(0.1)
+    h.record_success(0, 0.3)
+    assert h.ema(0) == pytest.approx(0.2)   # 0.5*0.1 + 0.5*0.3
+    h.record_failure(1)
+    st = h.stats()
+    assert st["successes"] == [2, 0] and st["failures"] == [0, 1]
+    h.reset(0)
+    assert h.ema(0) is None and not h.is_open(0)
+
+
+# ------------------------------------------------------- index snapshots
+def test_index_save_load_search_bitcompat(small_corpus, tmp_path):
+    index = build_index(small_corpus.docs, small_corpus.vecs, n_clusters=8)
+    path = tmp_path / "index.npz"
+    index.save(path)
+    loaded = load_index(path)
+    assert np.array_equal(np.asarray(index.docs.idx),
+                          np.asarray(loaded.docs.idx))
+    assert _dist_equal(index.docs.val, loaded.docs.val)
+    assert len(index.groups) == len(loaded.groups)
+    q = list(small_corpus.queries)
+    a = WmdEngine(index, lam=LAM, n_iter=N_ITER).search(q, 5, prune=PRUNE)
+    b = WmdEngine(loaded, lam=LAM, n_iter=N_ITER).search(q, 5, prune=PRUNE)
+    assert np.array_equal(a.indices, b.indices)
+    assert _dist_equal(a.distances, b.distances)
+
+
+def test_index_snapshot_corruption_detected(small_corpus, tmp_path):
+    index = build_index(small_corpus.docs, small_corpus.vecs, n_clusters=8)
+    path = tmp_path / "index.npz"
+    save_index(index, path)
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    arrays["val"] = arrays["val"] + 1e-3       # bit-flip, checksum kept
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+    with pytest.raises(ValueError, match="integrity"):
+        load_index(path)
+
+
+def test_sharded_snapshot_restore_bitcompat(sharded_engine, small_corpus,
+                                            tmp_path):
+    engine = sharded_engine
+    queries = list(small_corpus.queries)
+    baseline = engine.search(queries, 5, prune=PRUNE)
+    engine.snapshot(tmp_path)
+    engine.health.record_failure(0)            # pretend the shard died
+    engine.restore_shard(0)
+    assert not engine.health.is_open(0)
+    assert engine.health.ema(0) is None        # clean record post-restore
+    res = engine.search(queries, 5, prune=PRUNE)
+    assert engine.last_coverage.full
+    assert np.array_equal(baseline.indices, res.indices)
+    assert _dist_equal(baseline.distances, res.distances)
+
+
+def test_snapshot_requires_directory(sharded_engine):
+    with pytest.raises(ValueError, match="snapshot directory"):
+        sharded_engine.snapshot()
+    with pytest.raises(ValueError, match="snapshot directory"):
+        sharded_engine.restore_shard(0)
+
+
+def test_stale_snapshot_rejected_after_append(small_corpus, tmp_path):
+    from repro.core.sparse import PaddedDocs
+    sindex = shard_corpus(small_corpus.docs, small_corpus.vecs, 1,
+                          n_clusters=8)
+    engine = ShardedWmdEngine(sindex, lam=LAM, n_iter=N_ITER,
+                              snapshot_dir=tmp_path)
+    engine.snapshot()
+    grow = PaddedDocs(idx=small_corpus.docs.idx[:4],
+                      val=small_corpus.docs.val[:4])
+    engine.sindex = append_docs_sharded(engine.sindex, grow)
+    with pytest.raises(ValueError, match="STALE"):
+        engine.restore_shard(0)
+
+
+# ------------------------------------------------------ fan-out failures
+def test_raw_shard_exception_becomes_structured(sharded_engine,
+                                                small_corpus):
+    engine = sharded_engine
+
+    def boom(*a, **kw):
+        raise ValueError("boom")
+
+    engine.engines[0].search = boom
+    with pytest.raises(ShardSearchError, match="shard 0") as ei:
+        engine.search(list(small_corpus.queries), 5, prune=PRUNE)
+    assert ei.value.shard_reasons == {0: "ValueError: boom"}
+
+
+def test_transient_shard_failure_retried_to_success(sharded_engine,
+                                                    small_corpus):
+    engine = sharded_engine
+    orig = engine.engines[0].search
+    calls = []
+
+    def flaky(*a, **kw):
+        calls.append(1)
+        if len(calls) == 1:
+            raise RuntimeError("transient device loss")
+        return orig(*a, **kw)
+
+    engine.engines[0].search = flaky
+    res = engine.search(list(small_corpus.queries), 5, prune=PRUNE)
+    assert len(calls) == 2                  # retry inside _guarded_shard
+    assert engine.last_coverage.full
+    assert res.indices.shape == (3, 5)
+    assert engine.health.failures[0] == 0   # retried failures don't strike
+
+
+def test_timeout_opens_circuit_then_probe_readmits(small_corpus):
+    sindex = shard_corpus(small_corpus.docs, small_corpus.vecs, 1,
+                          n_clusters=8)
+    engine = ShardedWmdEngine(sindex, lam=LAM, n_iter=N_ITER,
+                              shard_timeout_s=0.05, shard_retries=0,
+                              fail_threshold=2, probe_every=2)
+    queries = list(small_corpus.queries)
+    baseline = engine.search(queries, 5, prune=PRUNE)   # warm compile
+    orig = engine.engines[0].search
+
+    def hang(*a, **kw):
+        time.sleep(0.3)
+        return orig(*a, **kw)
+
+    engine.engines[0].search = hang
+    for _ in range(2):
+        with pytest.raises(ShardSearchError, match="timeout"):
+            engine.search(queries, 5, prune=PRUNE)
+    assert engine.health.is_open(0)
+    assert engine.health.failures[0] == 2
+    engine.engines[0].search = orig
+    time.sleep(0.8)                  # drain the hung background futures
+    # 1-shard mesh with every circuit open: the fan-out force-probes (it
+    # never refuses to serve on breaker state alone), and the successful
+    # probe closes the circuit
+    res = engine.search(queries, 5, prune=PRUNE)
+    assert not engine.health.is_open(0)
+    assert engine.last_coverage.full
+    assert np.array_equal(baseline.indices, res.indices)
+
+
+def test_injected_shard_transient_retried(sharded_engine, small_corpus):
+    """Site-5 injection at rate 1.0 fails every FIRST attempt; the shard
+    retry absorbs it and the request still succeeds at full coverage."""
+    engine = sharded_engine
+    injector = FaultInjector(shard_transient_rate=1.0,
+                             shard_transient_attempts=1, seed=3)
+    engine.shard_fault_hook = injector.before_shard_attempt
+    res = engine.search(list(small_corpus.queries), 5, prune=PRUNE)
+    assert engine.last_coverage.full
+    assert res.indices.shape == (3, 5)
+    assert any(t[0] == "shard_transient" for t in injector.trace)
+
+
+# ----------------------------------------------- serving runtime surface
+def _run_serving(engine, queries, injector=None, k=5):
+    rt = ServingRuntime(
+        engine,
+        ServeConfig(max_batch=2, window_s=0.02, max_queue=64,
+                    deadline_s=None, backoff_s=0.001, prune=PRUNE),
+        injector=injector)
+
+    async def go():
+        await rt.start()
+        futs = [rt.submit(q, k=k) for q in queries]
+        out = await asyncio.gather(*futs)
+        await rt.stop()
+        return list(out)
+
+    return asyncio.run(go()), rt
+
+
+def test_crashed_only_shard_serves_structured_errors(sharded_engine,
+                                                     small_corpus):
+    """With the mesh's ONLY shard crashed, every request must still
+    resolve — to a structured ``shard_failed`` error, not a hang."""
+    engine = sharded_engine
+    injector = FaultInjector(crash_shard=0, crash_after=0, seed=1)
+    resps, rt = _run_serving(engine, list(small_corpus.queries),
+                             injector=injector)
+    assert len(resps) == 3
+    assert all(not r.ok for r in resps)
+    assert {r.error["code"] for r in resps} == {"shard_failed"}
+    assert all("shard" in r.error["message"] for r in resps)
+    stats = rt.stats()
+    assert stats["shard_health"]["failures"][0] > 0
+
+
+def test_recovered_shard_serves_clean_after_crash(sharded_engine,
+                                                  small_corpus, tmp_path):
+    engine = sharded_engine
+    engine.snapshot(tmp_path)
+    injector = FaultInjector(crash_shard=0, crash_after=0, seed=1)
+    resps, _ = _run_serving(engine, list(small_corpus.queries),
+                            injector=injector)
+    assert all(not r.ok for r in resps)
+    injector.revive_shard()
+    engine.restore_shard(0)
+    resps, rt = _run_serving(engine, list(small_corpus.queries),
+                             injector=injector)
+    assert all(r.ok and not r.partial for r in resps)
+    assert rt.stats()["partial"] == 0
+
+
+class _FakePartialEngine:
+    """Duck-typed sharded engine: reports half the corpus missing so the
+    runtime's coverage tagging can be tested on the real single device
+    (true multi-device partials run in test_shard_index.py)."""
+    min_bucket = 8
+    dtype = np.float32
+    iter_stats_dropped = 0
+    n_shards = 2
+    docs_per_shard = (4, 4)
+    shard_fault_hook = None
+
+    def reset_iter_stats(self):
+        pass
+
+    def iter_stats_by_stage(self):
+        return {}
+
+    def search(self, queries, k, **kw):
+        self.last_coverage = ShardCoverage(0.5, 4, (1,), {1: "timeout"})
+        nq = len(queries)
+        return SearchResult(np.zeros((nq, k), np.int32),
+                            np.zeros((nq, k), np.float32),
+                            np.zeros(nq, np.int64))
+
+
+def test_partial_coverage_tags_response_and_blocks_exactness():
+    rt = ServingRuntime(_FakePartialEngine(), ServeConfig(prune=PRUNE))
+    req = ServeRequest(rid=0, query=np.ones(4), k=3, deadline=None,
+                       enqueue_t=time.monotonic(), v_r=4)
+    resp = rt._score([req], rt.tiers[0])[req.rid]
+    assert resp.ok and resp.partial
+    assert not resp.exact, "partial response must never claim exactness"
+    assert resp.coverage == pytest.approx(0.5)
+    assert resp.missing_shards == [1]
+    assert "PARTIAL" in resp.caveat and "timeout" in resp.caveat
+    j = resp.to_json()
+    assert j["partial"] and j["coverage"] == pytest.approx(0.5)
+    assert j["missing_shards"] == [1]
+
+
+def test_shard_search_error_classified(small_corpus):
+    index = build_index(small_corpus.docs, small_corpus.vecs, n_clusters=8)
+    rt = ServingRuntime(WmdEngine(index, lam=LAM, n_iter=N_ITER),
+                        ServeConfig(prune=PRUNE))
+    req = ServeRequest(rid=1, query=np.ones(4), k=3, deadline=None,
+                       enqueue_t=time.monotonic(), v_r=4)
+    resp = rt._classify_error(
+        req, ShardSearchError("search: all 2 shards failed", {0: "x"}))
+    assert not resp.ok and resp.error["code"] == "shard_failed"
+    assert "shards" in resp.error["diagnostics"]
+
+
+# ------------------------------------------------------- compare.py gate
+def test_compare_warns_on_dead_gate_prefix(capsys):
+    from benchmarks.compare import compare
+    base = {"fig7.cdist": 100.0}
+    cur = {"fig7.cdist": 110.0}
+    failures = compare(base, cur, max_ratio=1.3,
+                       prefixes=["fig7", "fig99.gone"],
+                       min_prefixes=["fig98.recall"])
+    out = capsys.readouterr().out
+    assert failures == []
+    assert "gate prefix 'fig99.gone' matches no current record" in out
+    assert "gate prefix 'fig98.recall' matches no current record" in out
+    assert "'fig7'" not in out       # live prefixes don't warn

@@ -223,6 +223,83 @@ SCRIPT_STRUCTURE = textwrap.dedent("""
 """)
 
 
+SCRIPT_FAULT = textwrap.dedent("""
+    import os, tempfile, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core import (ShardedWmdEngine, WmdEngine, build_index,
+                            shard_corpus)
+    from repro.data.corpus import make_corpus
+
+    assert len(jax.devices()) == 2
+    c = make_corpus(vocab_size=512, embed_dim=16, n_docs=96, n_queries=3,
+                    seed=2)
+    queries, k = list(c.queries), 5
+    kw = dict(lam=8.0, n_iter=25)
+    engine = ShardedWmdEngine(
+        shard_corpus(c.docs, c.vecs, 2, n_clusters=12),
+        shard_timeout_s=30.0, shard_retries=0, fail_threshold=3,
+        snapshot_dir=tempfile.mkdtemp(), **kw)
+    baseline = engine.search(queries, k, prune="ivf+wcd+rwmd")
+    assert engine.last_coverage.full
+    engine.snapshot()
+
+    # degenerate merge, full coverage: k exceeds the smallest shard's doc
+    # count — that shard contributes a SHORT lane and the merged result
+    # still matches the single-device engine (tie-tolerant)
+    big_k = min(engine.docs_per_shard) + 3
+    ref = WmdEngine(build_index(c.docs, c.vecs, n_clusters=12),
+                    **kw).search(queries, big_k, prune="ivf+wcd+rwmd")
+    got = engine.search(queries, big_k, prune="ivf+wcd+rwmd")
+    for qi in range(len(queries)):
+        assert np.allclose(np.sort(ref.distances[qi]),
+                           np.sort(got.distances[qi]), rtol=2e-4,
+                           equal_nan=True), qi
+
+    # zero-survivor rows: nprobe=1 can starve a query on some shard; the
+    # merge must still return well-formed (-1 / NaN padded) rows
+    r1 = engine.search(queries, k, prune="ivf+wcd+rwmd", nprobe=1)
+    assert r1.indices.shape == (len(queries), k)
+    assert r1.indices.max() < engine.n_docs
+    assert np.all(np.isnan(r1.distances[r1.indices < 0]))
+
+    # one shard raising RAW mid-fan-out: the response is a PARTIAL top-k
+    # over the surviving shard only, with honest coverage accounting
+    orig = engine.engines[1].search
+    def boom(*a, **kws):
+        raise ValueError("injected shard death")
+    engine.engines[1].search = boom
+    res = engine.search(queries, k, prune="ivf+wcd+rwmd")
+    cov = engine.last_coverage
+    assert cov.missing_shards == (1,), cov
+    frac0 = engine.docs_per_shard[0] / engine.n_docs
+    assert abs(cov.fraction - frac0) < 1e-9, cov
+    assert "ValueError" in cov.reasons[1], cov.reasons
+    shard0 = set(engine.sindex.global_ids[0].tolist())
+    returned = res.indices[res.indices >= 0]
+    assert set(returned.tolist()) <= shard0, "partial leaked dead-shard ids"
+
+    # hang -> fan-out deadline excludes the shard with reason "timeout";
+    # snapshot restore then returns the mesh to BIT-EXACT full coverage
+    engine.shard_timeout_s = 0.2
+    def hang(*a, **kws):
+        time.sleep(2.0)
+        return orig(*a, **kws)
+    engine.engines[1].search = hang
+    engine.search(queries, k, prune="ivf+wcd+rwmd")
+    assert engine.last_coverage.reasons.get(1) == "timeout", \\
+        engine.last_coverage
+    time.sleep(2.5)                  # drain the hung background future
+    engine.shard_timeout_s = 30.0
+    engine.restore_shard(1)          # rebuild also discards the patch
+    res = engine.search(queries, k, prune="ivf+wcd+rwmd")
+    assert engine.last_coverage.full
+    assert np.array_equal(baseline.indices, res.indices)
+    assert np.array_equal(baseline.distances, res.distances)
+    print("SHARD_FAULT_OK")
+""")
+
+
 @pytest.mark.slow
 def test_shard_invariance_multidevice():
     res = _run(SCRIPT_INVARIANCE)
@@ -233,3 +310,12 @@ def test_shard_invariance_multidevice():
 def test_shard_collective_structure_multidevice():
     res = _run(SCRIPT_STRUCTURE)
     assert "SHARD_STRUCTURE_OK" in res.stdout, res.stdout + res.stderr
+
+
+@pytest.mark.slow
+def test_shard_fault_partials_and_recovery_multidevice():
+    """ISSUE 9 on a real 2-device mesh: degenerate merges (short shard
+    lanes, zero-survivor rows), raw-exception and timeout partials with
+    coverage accounting, and bit-exact snapshot recovery."""
+    res = _run(SCRIPT_FAULT)
+    assert "SHARD_FAULT_OK" in res.stdout, res.stdout + res.stderr
