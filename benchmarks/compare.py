@@ -13,8 +13,11 @@ Only benchmarks whose name starts with one of ``--prefixes`` gate (the
 rest are reported for context). ``fig10.iters`` records are realized
 Sinkhorn iteration counts, not wall times — gating them catches
 CONVERGENCE regressions (the adaptive solve suddenly needing more
-iterations) that wall-clock noise would hide. A missing/empty baseline
-passes with a note — the first record on main seeds the trajectory.
+iterations) that wall-clock noise would hide. A gate prefix whose
+current records have no baseline counterpart passes with an explicit
+``SEEDING (no baseline)`` marker (per prefix, covering both an empty
+trajectory and a newly-added benchmark) — the first bench-trajectory
+run on main seeds the comparison.
 
 ``--min-prefixes`` records gate in the OPPOSITE direction: they are
 quality metrics (``fig13.recall_*`` stores recall@k * 100), so a DROP is
@@ -55,10 +58,21 @@ def compare(
     # ran (skipped step, renamed record, typo'd prefix) — warn loudly so
     # a silently-dead gate doesn't read as a pass
     for p in list(prefixes) + list(min_prefixes):
-        if not any(name.startswith(p) for name in current):
+        cur = [name for name in current if name.startswith(p)]
+        if not cur:
             print(
                 f"warning: gate prefix '{p}' matches no current record — "
                 f"that benchmark did not run or was renamed"
+            )
+        elif not any(n in baseline and baseline[n] > 0 for n in cur):
+            # the gate exists but main's trajectory hasn't recorded this
+            # benchmark yet (empty trajectory, or a newly-added record):
+            # an explicit marker so "pass" is readable as "not yet
+            # comparable" rather than "compared and fine"
+            print(
+                f"SEEDING (no baseline): gate prefix '{p}' — "
+                f"{len(cur)} current record(s) await a baseline from "
+                f"main's bench-trajectory job"
             )
     for name in sorted(current):
         if name not in baseline or baseline[name] <= 0:
@@ -98,6 +112,7 @@ def main(argv=None) -> int:
             "fig13.wall",
             "fig14.p50",
             "fig14.recovery_s",
+            "fig15.p50",
         ],
         help="bench-name prefixes that gate (others are informational)",
     )
@@ -111,7 +126,7 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--min-prefixes",
         nargs="+",
-        default=["fig13.recall"],
+        default=["fig13.recall", "fig15.hit_rate"],
         help="bench-name prefixes gated as quality metrics: a DROP "
         "relative to baseline fails (excluded from the max gate)",
     )
@@ -123,8 +138,9 @@ def main(argv=None) -> int:
         return 2
     baseline = load(args.baseline)
     if not baseline:
-        print(f"no baseline records in {args.baseline}; seeding run — pass")
-        return 0
+        # still run compare(): it prints the per-prefix SEEDING markers
+        # (and dead-gate warnings) with an empty baseline, then passes
+        print(f"no baseline records in {args.baseline}; seeding run")
     failures = compare(
         baseline,
         current,

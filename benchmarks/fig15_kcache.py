@@ -1,0 +1,206 @@
+"""Beyond-paper Fig 15: the cross-request K-column cache under Zipfian
+serving traffic (ISSUE 10).
+
+Serving traffic is Zipfian over the vocabulary: the same hot query words
+recur request after request, yet until this PR every dispatch recomputed
+the full ``(V, Q*B)`` corpus-distance GEMM from scratch.
+:mod:`repro.core.kcache` keeps hot words' ``(V,)`` cdist rows
+device-resident across requests and GEMMs only the misses. This
+benchmark proves the contract before it times anything:
+
+1. *exactness FIRST*: a cache-on engine and a cache-off engine share one
+   index and score the same Zipfian batches, cold AND warm; top-k
+   indices and distances must be ``np.array_equal`` (bitwise — the
+   cached rows are produced by the same GEMM kernel shape family, see
+   the kcache module docstring). A speedup that changes answers is a
+   bug, not a feature.
+2. *hit rate SECOND*: a deterministic closed-loop replay (fixed batches
+   of 8, seeded Zipf s=1.0 stream) must exceed 50% hits after warmup —
+   otherwise the cache is decoration and the timing below is
+   meaningless. This number is the gated ``fig15.hit_rate`` record
+   (min-gated in CI like fig13.recall): fixed seeds + fixed batch
+   composition make it reproducible, unlike the serving-path hit rate
+   whose micro-batch boundaries depend on wall-clock arrival jitter.
+3. *timing LAST*: an open-loop Zipfian stream through
+   :class:`~repro.runtime.serving.ServingRuntime` (cache enabled by
+   default there) yields the gated ``fig15.p50``; the serving-path hit
+   rate rides along as an info record and is asserted > 0.5 as well.
+
+``FIG15_SMOKE=1`` shrinks the corpus and request counts (CI smoke); the
+exactness and hit-rate asserts still gate.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import WmdEngine, build_index
+from repro.data.corpus import make_corpus
+from repro.runtime.serving import (ServeConfig, ServingRuntime,
+                                   poisson_arrivals, run_open_loop)
+
+from .common import row
+
+K = 10
+PRUNE = "ivf+wcd+rwmd"
+SLOTS = 512
+ZIPF_S = 1.0
+DEADLINE_S = 2.0
+WINDOW_S = 0.01
+
+
+def _setup(smoke: bool):
+    n_docs = 256 if smoke else 2048
+    corpus = make_corpus(vocab_size=1024 if smoke else 8192,
+                         embed_dim=32 if smoke else 64,
+                         n_docs=n_docs, n_queries=8, seed=0)
+    index = build_index(corpus.docs, corpus.vecs)
+    return corpus, index
+
+
+def zipf_queries(n: int, vocab_size: int, words: int,
+                 s: float = ZIPF_S, seed: int = 0) -> list[np.ndarray]:
+    """``n`` L1-normalized query histograms whose words are drawn with
+    probability proportional to 1/rank**s (explicit rank-power law:
+    ``np.random.zipf`` requires s > 1, the serving literature's canonical
+    skew is exactly s = 1). A seeded permutation decouples Zipf rank
+    from word id so the stream doesn't accidentally align with the
+    synthetic corpus's own id-ordered skew."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, vocab_size + 1, dtype=np.float64) ** s
+    p /= p.sum()
+    rank_to_word = rng.permutation(vocab_size)
+    out = []
+    for _ in range(n):
+        ids = rank_to_word[rng.choice(vocab_size, size=words, p=p)]
+        q = np.zeros(vocab_size, np.float32)
+        np.add.at(q, ids, rng.random(words).astype(np.float32) + 0.1)
+        q /= q.sum()
+        out.append(q)
+    return out
+
+
+def _assert_exact(index, queries, batch: int = 8):
+    """Cache-on == cache-off, bitwise, cold and warm. Returns the warm
+    cache-on engine (deterministic state: fixed stream, fixed order) for
+    the hit-rate replay."""
+    eng_off = WmdEngine(index, lam=1.0, n_iter=15, impl="sparse")
+    eng_on = WmdEngine(index, lam=1.0, n_iter=15, impl="sparse",
+                       kcache_slots=SLOTS, kcache_min_hits=1)
+    for _pass in ("cold", "warm"):
+        for i in range(0, len(queries), batch):
+            chunk = queries[i:i + batch]
+            a = eng_off.search(chunk, K, prune=PRUNE)
+            b = eng_on.search(chunk, K, prune=PRUNE)
+            assert np.array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices)), (
+                f"kcache changed top-k membership ({_pass} pass, "
+                f"batch at {i})")
+            assert np.array_equal(np.asarray(a.distances),
+                                  np.asarray(b.distances)), (
+                f"kcache changed distances ({_pass} pass, batch at {i}): "
+                "the bit-exact contract is broken")
+    st = eng_on.kcache_stats()
+    assert st["hits"] > 0, f"cache never hit during exactness sweep: {st}"
+    return eng_on
+
+
+def _closed_loop_hit_rate(engine, queries, batch: int = 8) -> float:
+    """Deterministic fixed-batch replay on the (already warm) cache-on
+    engine: the reproducible hit-rate the CI trajectory min-gates."""
+    engine.reset_kcache_stats()
+    for i in range(0, len(queries), batch):
+        engine.search(queries[i:i + batch], K, prune=PRUNE)
+    st = engine.kcache_stats()
+    assert st["hits"] + st["misses"] > 0, f"no lookups recorded: {st}"
+    return st["hits"] / (st["hits"] + st["misses"])
+
+
+def _serving_drive(index, queries, n: int, seed: int = 1):
+    """Open-loop Zipfian stream through the runtime (kcache on by
+    default via ServeConfig): p50 plus the serving-path cache stats."""
+    engine = WmdEngine(index, lam=1.0, n_iter=15, impl="sparse")
+    runtime = ServingRuntime(
+        engine,
+        ServeConfig(max_batch=8, window_s=WINDOW_S, max_queue=64,
+                    deadline_s=DEADLINE_S, prune=PRUNE,
+                    backoff_s=0.005, seed=seed))
+    assert engine.kcache_stats() is not None, (
+        "ServingRuntime failed to enable the kcache by default")
+    # warm every tier's executables outside the measured stream, then
+    # estimate exact-tier capacity so the offered load is box-independent
+    from repro.runtime.serving import rwmd_topk
+    warm = [queries[i % len(queries)] for i in range(8)]
+    engine.search(warm, K, prune=PRUNE)
+    c = engine.index.clusters.n_clusters
+    engine.search(warm, K, prune=PRUNE, nprobe=max(1, c // 4))
+    rwmd_topk(engine, warm, K)
+    t0 = time.perf_counter()
+    engine.search(warm, K, prune=PRUNE)
+    cap = 8 / max(time.perf_counter() - t0, 1e-6)
+    # untimed open-loop pre-stream: the measured run's micro-batches come
+    # in sizes 1..max_batch depending on arrival jitter, and each fresh
+    # batch-size bucket compiles — warm those executables with a short
+    # throwaway stream so the gated p50 measures serving, not compiles
+    pre = [queries[i % len(queries)] for i in range(16)]
+    run_open_loop(runtime, pre,
+                  poisson_arrivals(16, rate_per_s=0.5 * cap, seed=99),
+                  k=K)
+    engine.reset_iter_stats()
+    engine.reset_kcache_stats()
+    reqs = [queries[i % len(queries)] for i in range(n)]
+    arrivals = poisson_arrivals(n, rate_per_s=0.5 * cap, seed=seed)
+    responses, stats = run_open_loop(runtime, reqs, arrivals, k=K)
+    assert len(responses) == n, (
+        f"runtime lost requests: {len(responses)}/{n} resolved")
+    lat = np.asarray([r.queue_ms + r.service_ms for r in responses
+                      if r.ok])
+    return responses, stats, lat
+
+
+def main(out=print) -> None:
+    smoke = bool(os.environ.get("FIG15_SMOKE"))
+    corpus, index = _setup(smoke)
+    vocab = corpus.vecs.shape[0]
+    words = 16 if smoke else 32
+    n_req = 48 if smoke else 128
+
+    stream = zipf_queries(n_req, vocab, words, s=ZIPF_S, seed=11)
+
+    # 1. exactness gate — nothing gets timed until this holds
+    eng_on = _assert_exact(index, stream[:16 if smoke else 32])
+
+    # 2. reproducible hit rate (the min-gated record)
+    hr = _closed_loop_hit_rate(eng_on, stream)
+    assert hr > 0.5, (
+        f"Zipf s={ZIPF_S} closed-loop hit rate {hr:.3f} <= 0.5: the "
+        "cache is not earning its slots")
+    out(row("fig15.hit_rate", 100.0 * hr,
+            f"closed-loop Zipf s={ZIPF_S} hit percent, {SLOTS} slots, "
+            f"vocab {vocab} (percent, not usec; min-gated)"))
+
+    # 3. serving-path timing (the max-gated record)
+    responses, stats, lat = _serving_drive(index, stream, n_req)
+    kc = stats.get("kcache")
+    assert kc is not None, f"runtime stats carry no kcache block: {stats}"
+    shr = kc["hits"] / max(kc["hits"] + kc["misses"], 1)
+    assert shr > 0.5, (
+        f"serving-path hit rate {shr:.3f} <= 0.5 under Zipf s={ZIPF_S}: "
+        f"{kc}")
+    per_resp = [r.kcache for r in responses if r.ok and r.kcache]
+    assert per_resp, "no response carried per-dispatch kcache deltas"
+    out(row("fig15.p50", float(np.percentile(lat, 50)) * 1e3,
+            f"end-to-end ms*1e3 at ~0.5x capacity n={n_req}, cache "
+            f"hits={kc['hits']} misses={kc['misses']} "
+            f"evictions={kc['evictions']}"))
+    # named so the gated `fig15.hit_rate` prefix does NOT match it: the
+    # serving-path number jitters with micro-batch boundaries
+    out(row("fig15.serving_hit_rate", 100.0 * shr,
+            "serving-path hit percent (info: micro-batch boundaries "
+            "jitter with wall clock; the gated twin is closed-loop)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1211,6 +1211,19 @@ class WmdEngine:
                  (:meth:`iter_stats`); overflow discards the OLDEST record
                  and is counted by :attr:`iter_stats_dropped` so a
                  long-running serve can tell a window from a full history.
+    kcache_slots: opt-in cross-request cdist-row cache (ISSUE 10;
+                 ``impl="sparse"`` only): keep this many hot words'
+                 ``(V,)`` corpus-distance rows device-resident with an
+                 LRU clock, so Zipfian serving traffic assembles its
+                 ``(Q, V, B)`` K block from cached rows + a misses-only
+                 GEMM instead of recomputing the full stacked GEMM per
+                 dispatch. Bit-exact against the uncached path (see
+                 ``core/kcache.py``); the serving runtime enables it by
+                 default. ``None``/``0`` disables.
+    kcache_min_hits: dispatch-economy threshold: a chunk with fewer
+                 resident rows than this falls back to the one-shot
+                 stacked GEMM (cheaper on CPU than gather + miss GEMM +
+                 scatter) and warms the cache from its ``mq`` block.
     """
 
     def __init__(self, index: CorpusIndex, lam: float = 10.0,
@@ -1221,13 +1234,21 @@ class WmdEngine:
                  prune_slack: float = 1e-3, tol: float | None = None,
                  check_every: int = 4, precision=None,
                  scope: str = "query", warm_start: bool = False,
-                 iter_stats_maxlen: int = 4096):
+                 iter_stats_maxlen: int = 4096,
+                 kcache_slots: int | None = None,
+                 kcache_min_hits: int = 4):
         if impl not in ENGINE_IMPLS:
             raise ValueError(f"impl must be one of {ENGINE_IMPLS}, "
                              f"got {impl!r}")
         if scope not in ("chunk", "query"):
             raise ValueError(f"scope must be 'chunk' or 'query', "
                              f"got {scope!r}")
+        if kcache_slots and impl == "kernel":
+            raise ValueError(
+                "kcache_slots needs impl='sparse': the kernel impl's "
+                "staged pair carries no mq block to warm the cache from "
+                "(and reconstructs GM in VMEM, bypassing the kq the "
+                "cache would assemble)")
         self.index = index
         self.lam = float(lam)
         self.n_iter = int(n_iter)
@@ -1255,6 +1276,36 @@ class WmdEngine:
         self._iters_pending: collections.deque = collections.deque(
             maxlen=max(1, int(iter_stats_maxlen)))
         self._iters_dropped = 0
+        # cross-request cdist-row cache (ISSUE 10): opt-in here, enabled
+        # by default by the serving runtime where Zipfian reuse lives
+        self._kcache = None
+        self.kcache_min_hits = max(1, int(kcache_min_hits))
+        if kcache_slots:
+            self.enable_kcache(int(kcache_slots))
+
+    # ------------------------------------------------- cross-request cache
+    def enable_kcache(self, slots: int) -> bool:
+        """Attach a :class:`~repro.core.kcache.KCache` of ``slots``
+        resident cdist rows (replacing any existing cache). Returns
+        ``False`` on the kernel impl — its staged pair has no ``mq`` to
+        warm from — so serving's enable-by-default stays a no-op there.
+        Search results are unchanged bit-for-bit (the cache module's
+        exactness contract, pinned by the property suite)."""
+        if self.impl == "kernel":
+            return False
+        from .kcache import KCache
+        self._kcache = KCache(self.index.vecs, self.index.vecs_sq,
+                              int(slots), gemm=self.precision.gemm)
+        return True
+
+    def kcache_stats(self) -> dict | None:
+        """Hit/miss/eviction counters of the cross-request cache
+        (``None`` when no cache is attached)."""
+        return None if self._kcache is None else self._kcache.stats()
+
+    def reset_kcache_stats(self) -> None:
+        if self._kcache is not None:
+            self._kcache.reset_counters()
 
     # -------------------------------------------------- realized iterations
     def reset_iter_stats(self) -> None:
@@ -1429,7 +1480,15 @@ class WmdEngine:
         """(kq, mq) for one staged chunk — treat as an opaque pair; the
         solve stage consumes both (kernel gather + distance epilogue).
         The kernel impl reconstructs GM in VMEM, so its pair carries
-        ``mq=None`` instead of an unused (Q, V, B) buffer."""
+        ``mq=None`` instead of an unused (Q, V, B) buffer.
+
+        With a :meth:`enable_kcache` cache attached, chunks whose words
+        are mostly resident assemble the pair from cached cdist rows
+        (gather + misses-only GEMM) instead of the full stacked GEMM;
+        below ``kcache_min_hits`` resident rows the one-shot GEMM is
+        cheaper on CPU (dispatch economy — see the ROADMAP refusion
+        note) and its ``mq`` block warms the cache for the next request.
+        Both paths produce BIT-IDENTICAL pairs (``core/kcache.py``)."""
         if self.impl == "kernel":
             kq = _compute_kq(sup, mask, self.index.vecs,
                              self.index.vecs_sq, self.lam,
@@ -1437,8 +1496,35 @@ class WmdEngine:
                              log_domain=self.precision.log_domain,
                              with_m=False)
             return kq, None
-        return _compute_kq(sup, mask, self.index.vecs, self.index.vecs_sq,
-                           self.lam, gemm=self.precision.gemm,
+        cache = self._kcache
+        if cache is not None and cache.vecs is not self.index.vecs:
+            # anything that swapped the embedding table (a new index, a
+            # snapshot reload) invalidates every resident row; append_docs
+            # reuses vecs by identity — the vocabulary is frozen — so
+            # appends sail through here with the cache intact
+            cache = self._kcache = cache.rebind(self.index.vecs,
+                                                self.index.vecs_sq)
+        if cache is None:
+            return _compute_kq(sup, mask, self.index.vecs,
+                               self.index.vecs_sq, self.lam,
+                               gemm=self.precision.gemm,
+                               log_domain=self.precision.log_domain)
+        sup_np = np.asarray(sup)
+        ids = np.unique(sup_np.reshape(-1))
+        n_hit = cache.lookup(ids)
+        oversize = len(ids) > cache.slots
+        if oversize or n_hit < self.kcache_min_hits:
+            cache.note_fallback(oversize=oversize)
+            kq, mq = _compute_kq(sup, mask, self.index.vecs,
+                                 self.index.vecs_sq, self.lam,
+                                 gemm=self.precision.gemm,
+                                 log_domain=self.precision.log_domain)
+            cache.warm(sup_np, mq)
+            return kq, mq
+        from .kcache import assemble_kq
+        rows = cache.rows(ids)
+        inv = jnp.asarray(np.searchsorted(ids, sup_np).astype(np.int32))
+        return assemble_kq(rows, inv, mask, self.lam,
                            log_domain=self.precision.log_domain)
 
     def _raise_if_nan(self, wmd_np: np.ndarray, chunk_queries: list) -> None:

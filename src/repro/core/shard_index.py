@@ -614,6 +614,39 @@ class ShardedWmdEngine:
         return {s: e.iter_stats_by_stage()
                 for s, e in enumerate(self.engines)}
 
+    # ------------------------------------------- cross-request cache (ISSUE 10)
+    def enable_kcache(self, slots: int) -> bool:
+        """Attach a PER-SHARD cdist-row cache to every shard engine
+        (each shard's rows live against its own device-resident ``vecs``
+        copy). Recorded in ``_engine_kwargs`` so a restored shard
+        (:meth:`restore_shard`) rebuilds with a fresh cache of the same
+        capacity. Returns ``False`` (no-op) on the kernel impl."""
+        ok = all(e.enable_kcache(slots) for e in self.engines)
+        if ok:
+            self._engine_kwargs["kcache_slots"] = int(slots)
+        return ok
+
+    def kcache_stats(self) -> dict | None:
+        """Shard-summed cache counters (``None`` when no shard carries a
+        cache); per-shard split under ``"per_shard"``."""
+        per = [e.kcache_stats() for e in self.engines]
+        if all(p is None for p in per):
+            return None
+        agg: dict = {"slots": 0, "used": 0, "hits": 0, "misses": 0,
+                     "evictions": 0, "inserts": 0, "lookups": 0,
+                     "fallbacks": 0, "oversize": 0}
+        for p in per:
+            for k in agg:
+                agg[k] += p[k] if p else 0
+        total = agg["hits"] + agg["misses"]
+        agg["hit_rate"] = round(agg["hits"] / total, 4) if total else 0.0
+        agg["per_shard"] = per
+        return agg
+
+    def reset_kcache_stats(self) -> None:
+        for e in self.engines:
+            e.reset_kcache_stats()
+
     # --------------------------------------------------------------- merge
     def _merge_fn(self, k: int):
         fn = self._merge_cache.get(k)

@@ -94,6 +94,11 @@ def _build_wmd_engine(args, corpus):
               tol=args.tol if args.tol > 0 else None,
               check_every=args.check_every, precision=args.precision,
               scope=args.scope, warm_start=args.warm_start)
+    if getattr(args, "kcache_slots", -1) > 0:
+        # explicit opt-in at engine build; -1 leaves it to the serving
+        # runtime's default-on behaviour (ServeConfig.kcache_slots), 0
+        # disables there too
+        kw["kcache_slots"] = args.kcache_slots
     if args.shards > 1:
         from repro.core import ShardedWmdEngine, shard_corpus
         from repro.runtime.sharding import ensure_host_devices
@@ -255,7 +260,9 @@ def serve_async(args) -> None:
         deadline_s=args.deadline_ms / 1e3 if args.deadline_ms > 0 else None,
         prune="rwmd" if args.prune == "none" else args.prune,
         nprobe=args.nprobe if args.nprobe > 0 else None,
-        refine_factor=args.refine_factor)
+        refine_factor=args.refine_factor,
+        kcache_slots=(args.kcache_slots if args.kcache_slots >= 0
+                      else ServeConfig.kcache_slots))
     runtime = ServingRuntime(engine, cfg, injector=injector)
     # warm the compile caches OUTSIDE the measured stream: one dispatch per
     # tier (first-request latency would otherwise be compile time)
@@ -386,6 +393,15 @@ def main() -> None:
     ap.add_argument("--deadline-ms", type=float, default=500.0,
                     help="--serve: per-request deadline budget "
                          "(0 = none); blown budgets degrade, not drop")
+    ap.add_argument("--kcache-slots", type=int, default=-1,
+                    help="cross-request cdist-row cache capacity (ISSUE "
+                         "10). -1 (default): engine built without a cache "
+                         "but --serve enables its default "
+                         "(ServeConfig.kcache_slots); 0: disabled "
+                         "everywhere; > 0: enabled at engine build with "
+                         "this many device-resident (V,) rows. Results "
+                         "are bit-exact either way; requires "
+                         "--impl sparse")
     ap.add_argument("--inject-latency-rate", type=float, default=0.0,
                     help="fault injection: per-attempt probability of "
                          "added dispatch latency")

@@ -45,6 +45,16 @@ Degradation ladder (cheapest-last)
        min-cdist + O(nnz) gather per chunk, returns bound values as
        distances.
 
+Cross-request K-column cache (ISSUE 10)
+    Serving traffic is Zipfian over the vocabulary, so the runtime
+    enables the engine's cross-request cdist-row cache by default
+    (``ServeConfig.kcache_slots``; ``core/kcache.py``): hot query words'
+    ``(V,)`` corpus-distance rows stay device-resident across dispatches
+    and each staged chunk recomputes only its missing rows. Results are
+    bit-exact against the uncached path; hit/miss/eviction counters land
+    in :meth:`ServingRuntime.stats` and each response carries its own
+    dispatch's hit/miss delta (``ServeResponse.kcache``).
+
 Fault tolerance
     Each dispatch runs under a
     :class:`~repro.runtime.fault_tolerance.DispatchGuard`: transient
@@ -256,6 +266,9 @@ class ServeResponse:
     partial: bool = False         # a shard missed: result covers < 100%
     coverage: float | None = None     # covered corpus fraction if partial
     missing_shards: list | None = None  # shard ids absent from the merge
+    kcache: dict | None = None    # this dispatch's cdist-row cache hits/
+    #                               misses/hit_rate (ISSUE 10), when the
+    #                               engine carries a cache
 
     def to_json(self) -> dict:
         d = {"rid": self.rid, "ok": self.ok, "tier": self.tier,
@@ -279,6 +292,8 @@ class ServeResponse:
             d["partial"] = True
             d["coverage"] = self.coverage
             d["missing_shards"] = self.missing_shards
+        if self.kcache is not None:
+            d["kcache"] = self.kcache
         return d
 
 
@@ -288,6 +303,25 @@ def _error_response(req: ServeRequest, code: str, message: str,
     if diagnostics:
         err["diagnostics"] = diagnostics
     return ServeResponse(rid=req.rid, ok=False, error=err, **kw)
+
+
+def _validate_query(q: np.ndarray) -> str | None:
+    """Admission-time shape/dtype/finiteness check (ISSUE 10 bugfix):
+    the reason string for a structured ``invalid_query`` rejection, or
+    ``None`` for a well-formed query. Runs BEFORE the request can reach
+    the worker thread — a NaN histogram must not burn a dispatch and
+    trip the poison-isolation path for its batchmates."""
+    if q.dtype == object or not (np.issubdtype(q.dtype, np.number)
+                                 or q.dtype == np.bool_):
+        return (f"query must be a numeric histogram over the "
+                f"vocabulary, got dtype {q.dtype}")
+    if q.ndim != 1:
+        return (f"query must be a 1-D vocabulary histogram, got shape "
+                f"{q.shape}")
+    if not np.isfinite(q).all():
+        return ("query weights must be finite: NaN/Inf in the "
+                "histogram (WMD marginals are undefined)")
+    return None
 
 
 # -------------------------------------------------------- fault injection
@@ -472,6 +506,13 @@ class ServeConfig:
     watchdog_s: float = 5.0
     seed: int = 0
     ema_alpha: float = 0.3        # per-tier service-time EMA smoothing
+    kcache_slots: int = 512       # cross-request cdist-row cache (ISSUE
+    #                               10), enabled by default in serving —
+    #                               Zipfian traffic is where the reuse
+    #                               lives; 0 disables. Bit-exact either
+    #                               way (core/kcache.py); a no-op when
+    #                               the engine already carries a cache
+    #                               or its impl can't host one
 
 
 class ServingRuntime:
@@ -510,7 +551,8 @@ class ServingRuntime:
         self._iters_dropped = 0       # engine ring discards, accumulated
         self._closing = False         # graceful-drain flag (ISSUE 9)
         self.counters = {
-            "submitted": 0, "rejected": 0, "dispatches": 0, "errors": 0,
+            "submitted": 0, "rejected": 0, "invalid_query": 0,
+            "dispatches": 0, "errors": 0,
             "isolations": 0, "deadline_missed": 0, "partial": 0,
             "shutdown_rejected": 0,
             "tiers": {t.name: 0 for t in self.tiers}}
@@ -519,6 +561,14 @@ class ServingRuntime:
         if injector is not None \
                 and getattr(engine, "shard_fault_hook", ...) is None:
             engine.shard_fault_hook = injector.before_shard_attempt
+        # cross-request K-column cache (ISSUE 10): serving is where the
+        # Zipfian word reuse lives, so the runtime enables it by default
+        # on any engine that can host one and doesn't already
+        if self.cfg.kcache_slots > 0 \
+                and getattr(engine, "kcache_stats", lambda: None)() is None:
+            enable = getattr(engine, "enable_kcache", None)
+            if enable is not None:
+                enable(self.cfg.kcache_slots)
 
     # ------------------------------------------------------------ control
     async def start(self) -> None:
@@ -576,9 +626,17 @@ class ServingRuntime:
         of (the future itself NEVER raises):
 
         - ``rejected_overload``: queue full, retry later (only refusal).
+          ``error["retry_after_s"]`` is the backpressure hint — the
+          measured service-time EMA of the tier the degradation
+          watermarks would serve at the CURRENT depth (under sustained
+          overload that is a degraded tier; tier 0's EMA would be stale).
         - ``shutting_down``: the runtime is draining after
           :meth:`request_shutdown`; already-admitted requests still
           resolve, this one was not admitted.
+        - ``invalid_query``: the query is not a finite 1-D numeric
+          histogram (NaN/Inf weights, wrong rank, non-numeric dtype) —
+          rejected at admission, never dispatched, so it cannot burn a
+          dispatch or trip the poison-isolation path for its batchmates.
         - ``empty_query``: query has no support; WMD is undefined.
         - ``lam_underflow``: deterministic per-request
           :class:`LamUnderflowError` — K = exp(-lam*M) underflowed for
@@ -602,17 +660,31 @@ class ServingRuntime:
         now = time.monotonic()
         if deadline_s is ...:
             deadline_s = self.cfg.deadline_s
-        q = np.asarray(query)
+        # admission validation (ISSUE 10 bugfix): malformed queries must
+        # be structured-rejected HERE — admitted, a NaN query burned a
+        # dispatch and tripped per-request isolation (re-solving its
+        # batchmates solo), and a ragged/2-D one died as `internal`
+        try:
+            q = np.asarray(query)
+            invalid = _validate_query(q)
+        except Exception as e:          # noqa: BLE001 — admission boundary
+            q = np.zeros(0)
+            invalid = f"query is not array-like: {type(e).__name__}: {e}"
         req = ServeRequest(
             rid=rid, query=q, k=int(k),
             deadline=None if deadline_s is None else now + deadline_s,
-            enqueue_t=now, v_r=int((q > 0).sum()), future=fut)
+            enqueue_t=now,
+            v_r=0 if invalid else int((q > 0).sum()), future=fut)
         if self._closing:
             self.counters["shutdown_rejected"] += 1
             fut.set_result(_error_response(
                 req, "shutting_down",
                 "runtime is draining for shutdown; request not admitted "
                 "(already-admitted requests still resolve)"))
+            return fut
+        if invalid:
+            self.counters["invalid_query"] += 1
+            fut.set_result(_error_response(req, "invalid_query", invalid))
             return fut
         if req.v_r == 0:
             fut.set_result(_error_response(
@@ -622,11 +694,17 @@ class ServingRuntime:
             return fut
         if self._depth >= self.cfg.max_queue:
             self.counters["rejected"] += 1
-            est = self._ema.ema(0) or 0.0
-            fut.set_result(_error_response(
+            # backpressure hint (ISSUE 10 bugfix): estimate from the tier
+            # the watermark logic would serve RIGHT NOW — at full depth
+            # that is a degraded tier, and tier 0's EMA is stale or None
+            # under sustained overload
+            est = self._retry_after()
+            resp = _error_response(
                 req, "rejected_overload",
                 f"queue full ({self.cfg.max_queue}); backpressure — "
-                f"retry after ~{round(est + self.cfg.window_s, 4)}s"))
+                f"retry after ~{round(est + self.cfg.window_s, 4)}s")
+            resp.error["retry_after_s"] = round(est + self.cfg.window_s, 4)
+            fut.set_result(resp)
             return fut
         self._depth += 1
         self._queue.put_nowait(req)
@@ -687,10 +765,7 @@ class ServingRuntime:
           answer now beats an exact answer nobody is waiting for.
         """
         last = len(self.tiers) - 1
-        tier = 0
-        for i, frac in enumerate(self.cfg.degrade_depth, start=1):
-            if self._depth >= frac * self.cfg.max_queue:
-                tier = min(i, last)
+        tier = self._depth_tier()
         budgets = [r.deadline - now for r in batch
                    if r.deadline is not None]
         if budgets:
@@ -703,6 +778,30 @@ class ServingRuntime:
                     break
                 tier += 1
         return tier
+
+    def _depth_tier(self) -> int:
+        """Tier the queue-depth watermarks force at the CURRENT depth —
+        the load-shedding half of :meth:`_choose_tier`, shared with the
+        backpressure hint so both report the same ladder position."""
+        last = len(self.tiers) - 1
+        tier = 0
+        for i, frac in enumerate(self.cfg.degrade_depth, start=1):
+            if self._depth >= frac * self.cfg.max_queue:
+                tier = min(i, last)
+        return tier
+
+    def _retry_after(self) -> float:
+        """Backpressure hint: the service-time EMA of the tier the
+        watermark logic would serve right now, falling back across the
+        ladder (cheaper tiers first — under overload those are the ones
+        actually being exercised, so their EMAs are fresh) and then back
+        up toward exact; 0 before any dispatch has been measured."""
+        t = self._depth_tier()
+        for i in list(range(t, len(self.tiers))) + list(range(t - 1, -1, -1)):
+            est = self._ema.ema(i)
+            if est is not None:
+                return est
+        return 0.0
 
     # ----------------------------------------------------------- dispatch
     async def _run_dispatch(self, batch: list[ServeRequest],
@@ -818,6 +917,7 @@ class ServingRuntime:
         kmax = max(r.k for r in reqs)
         self._iters_dropped += self.engine.iter_stats_dropped
         self.engine.reset_iter_stats()    # per-dispatch attribution
+        kc0 = getattr(self.engine, "kcache_stats", lambda: None)()
         if tier.solve:
             kw = {}
             if tier.mode != "exact":
@@ -846,6 +946,16 @@ class ServingRuntime:
         iters = {st: round(float(arr.mean()), 2)
                  for st, arr in self.engine.iter_stats_by_stage().items()
                  if arr.size}
+        # per-dispatch cache observability (ISSUE 10): the delta this
+        # dispatch contributed to the cross-request cache's counters —
+        # race-free for the same single-worker-thread reason as coverage
+        kc = None
+        kc1 = getattr(self.engine, "kcache_stats", lambda: None)()
+        if kc1 is not None:
+            dh = kc1["hits"] - (kc0["hits"] if kc0 else 0)
+            dm = kc1["misses"] - (kc0["misses"] if kc0 else 0)
+            kc = {"hits": dh, "misses": dm,
+                  "hit_rate": round(dh / (dh + dm), 4) if dh + dm else 0.0}
         out = {}
         for i, req in enumerate(reqs):
             kk = min(req.k, indices.shape[1])
@@ -864,7 +974,8 @@ class ServingRuntime:
                 coverage=(round(float(cov.fraction), 4) if partial
                           else None),
                 missing_shards=(list(cov.missing_shards) if partial
-                                else None))
+                                else None),
+                kcache=kc)
         return out
 
     # -------------------------------------------------------------- stats
@@ -881,6 +992,9 @@ class ServingRuntime:
                                    + self.engine.iter_stats_dropped)
         c["tier_ema_s"] = {self.tiers[i].name: round(v, 4)
                            for i, v in self._ema._ema.items()}
+        kc = getattr(self.engine, "kcache_stats", lambda: None)()
+        if kc is not None:
+            c["kcache"] = kc
         shards = getattr(self.engine, "n_shards", None)
         if shards:
             c["shards"] = int(shards)

@@ -1,0 +1,98 @@
+"""Trajectory-gate plumbing tests (ISSUE 10 satellite) — no jax needed.
+
+The bench-trajectory pipeline silently broke once already: an unanchored
+``BENCH_*.json`` gitignore pattern made CI's ``git add`` skip the
+per-sha records, so main's trajectory stayed empty and every PR gate
+"passed" against a missing baseline. These tests pin the repo-side
+pieces: compare.py must say ``SEEDING (no baseline)`` per gated prefix
+(readable as "not yet comparable", never as "compared and fine"), and
+the ignore pattern must stay root-anchored so committed trajectory
+records are trackable.
+"""
+import json
+import subprocess
+from pathlib import Path
+
+from benchmarks.compare import compare, load, main as compare_main
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_seeding_marker_per_prefix_on_empty_baseline(capsys):
+    failures = compare({}, {"fig15.p50": 50.0, "fig15.hit_rate": 80.0},
+                       max_ratio=1.3, prefixes=["fig15.p50"],
+                       min_prefixes=["fig15.hit_rate"])
+    out = capsys.readouterr().out
+    assert failures == []
+    assert "SEEDING (no baseline): gate prefix 'fig15.p50'" in out
+    assert "SEEDING (no baseline): gate prefix 'fig15.hit_rate'" in out
+
+
+def test_seeding_marker_for_newly_added_benchmark_only(capsys):
+    """A baseline that predates a new benchmark: the new prefix seeds,
+    the established one gates normally (and still fails on regression)."""
+    base = {"fig7.cdist": 100.0}
+    cur = {"fig7.cdist": 150.0, "fig15.p50": 50.0}
+    failures = compare(base, cur, max_ratio=1.3,
+                       prefixes=["fig7", "fig15.p50"])
+    out = capsys.readouterr().out
+    assert "SEEDING (no baseline): gate prefix 'fig15.p50'" in out
+    assert "'fig7'" not in out          # established prefix: no marker
+    assert failures and "fig7.cdist" in failures[0]
+
+
+def test_dead_prefix_warns_not_seeds(capsys):
+    """No current record at all is a DEAD gate (benchmark didn't run) —
+    a different failure mode than awaiting a baseline."""
+    compare({}, {"fig15.p50": 50.0}, max_ratio=1.3,
+            prefixes=["fig15.p50", "fig99.gone"])
+    out = capsys.readouterr().out
+    assert "gate prefix 'fig99.gone' matches no current record" in out
+    assert "SEEDING (no baseline): gate prefix 'fig99.gone'" not in out
+    assert "SEEDING (no baseline): gate prefix 'fig15.p50'" in out
+
+
+def test_main_passes_and_marks_seeding_on_missing_baseline(tmp_path,
+                                                           capsys):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps({"fig15.p50": 50.0, "fig15.hit_rate": 80.0}))
+    rc = compare_main(["--baseline", str(tmp_path / "absent.json"),
+                       "--current", str(cur)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "seeding run" in out
+    assert "SEEDING (no baseline): gate prefix 'fig15.p50'" in out
+    assert "SEEDING (no baseline): gate prefix 'fig15.hit_rate'" in out
+    assert load(str(tmp_path / "absent.json")) == {}
+
+
+def test_default_gates_cover_fig15_both_directions(tmp_path, capsys):
+    """The CLI defaults must gate fig15.p50 (max direction) and
+    fig15.hit_rate (min direction) — ci.yml lists them explicitly, the
+    defaults are what ad-hoc local runs get."""
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps({"fig15.p50": 100.0,
+                                "fig15.hit_rate": 80.0}))
+    cur.write_text(json.dumps({"fig15.p50": 200.0,    # 2x slower
+                               "fig15.hit_rate": 40.0}))  # hit rate halved
+    rc = compare_main(["--baseline", str(base), "--current", str(cur)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "fig15.p50: 2.00x > 1.30x" in out
+    assert "fig15.hit_rate: 0.5000x < 0.9990x" in out
+
+
+def test_trajectory_records_not_gitignored():
+    """The root cause of the empty trajectory: an unanchored
+    ``BENCH_*.json`` ignore rule swallowed
+    ``benchmarks/trajectory/BENCH_<sha>.json`` during CI's ``git add``.
+    Runner outputs at the repo root must stay ignored; committed
+    trajectory records must not be."""
+    def ignored(path):
+        return subprocess.run(
+            ["git", "check-ignore", "-q", path], cwd=REPO).returncode == 0
+
+    assert ignored("BENCH_smoke.json")
+    assert not ignored("benchmarks/trajectory/BENCH_abc1234.json")
+    assert not ignored("benchmarks/trajectory/latest.json")

@@ -350,6 +350,127 @@ def test_responses_carry_observability(engine, queries):
     assert stats["tier_ema_s"]      # EMA recorded for the served tier
 
 
+# -------------------------------------------- admission validation (ISSUE 10)
+def test_nan_query_rejected_batchmates_unaffected(engine, queries):
+    """A NaN-weight histogram resolves to a structured ``invalid_query``
+    at ADMISSION — it never reaches the worker thread, never burns a
+    dispatch, and its batchmate (same coalescer window) is served
+    normally."""
+    bad = queries[0].copy()
+    bad[np.flatnonzero(bad)[0]] = np.nan
+    resps, rt = _serve(engine, [bad, queries[1]], _cfg(max_batch=2))
+    assert not resps[0].ok
+    assert resps[0].error["code"] == "invalid_query"
+    assert "finite" in resps[0].error["message"]
+    assert resps[1].ok and len(resps[1].indices) == 5
+    assert resps[1].batch_size == 1            # bad one never coalesced
+    assert rt.counters["invalid_query"] == 1
+    assert rt.counters["isolations"] == 0      # not the poison path
+
+
+def test_2d_query_rejected_before_dispatch(engine, queries):
+    resps, rt = _serve(engine, [np.stack([queries[0], queries[0]])])
+    assert not resps[0].ok
+    assert resps[0].error["code"] == "invalid_query"
+    assert "1-D" in resps[0].error["message"]
+    assert rt.counters["dispatches"] == 0      # nothing reached the worker
+    assert rt.counters["invalid_query"] == 1
+
+
+def test_nonnumeric_and_ragged_queries_rejected(engine, queries):
+    """Object-dtype and not-even-array-like inputs both land in the same
+    structured code instead of exploding inside the worker."""
+    obj = np.asarray([None] * queries[0].size, dtype=object)
+    ragged = [[1.0, 2.0], [3.0]]               # np.asarray raises on this
+    resps, rt = _serve(engine, [obj, ragged])
+    for r in resps:
+        assert not r.ok and r.error["code"] == "invalid_query"
+    assert rt.counters["invalid_query"] == 2
+    assert rt.counters["dispatches"] == 0
+
+
+def test_inf_query_rejected(engine, queries):
+    bad = queries[0].copy()
+    bad[np.flatnonzero(bad)[0]] = np.inf
+    resps, _ = _serve(engine, [bad])
+    assert not resps[0].ok
+    assert resps[0].error["code"] == "invalid_query"
+
+
+# ---------------------------------------- backpressure hint (ISSUE 10 fix)
+def test_retry_after_uses_currently_degraded_tiers_ema(engine, queries):
+    """The ``rejected_overload`` hint must quote the service-time EMA of
+    the tier the watermarks would serve at the CURRENT depth — under
+    sustained overload that is a degraded tier; quoting tier 0's stale
+    EMA (the old bug) tells callers to back off ~100x too long."""
+    cfg = _cfg(max_queue=10, degrade_depth=(0.5, 0.8))
+    rt = ServingRuntime(engine, cfg)
+    rt._ema.record(0, 5.0)                     # stale exact-tier EMA
+    rt._ema.record(2, 0.05)                    # fresh degraded-tier EMA
+    rt._depth = cfg.max_queue                  # saturated -> watermark tier 2
+    assert rt._depth_tier() == 2
+    assert abs(rt._retry_after() - 0.05) < 1e-12
+
+    async def go():
+        await rt.start()
+        r = await rt.submit(queries[0], k=5)
+        rt._depth = 0                          # undo the forced saturation
+        await rt.stop()
+        return r
+
+    r = asyncio.run(go())
+    assert not r.ok and r.error["code"] == "rejected_overload"
+    assert r.error["retry_after_s"] == round(0.05 + cfg.window_s, 4)
+
+
+def test_retry_after_falls_back_across_tiers(engine):
+    """No EMA at the watermark tier: the hint walks cheaper tiers first
+    (those are the ones overload actually exercises), then back up
+    toward exact; with no measurements at all it reports 0."""
+    cfg = _cfg(max_queue=10, degrade_depth=(0.5, 0.8))
+    rt = ServingRuntime(engine, cfg)
+    rt._depth = cfg.max_queue
+    assert rt._retry_after() == 0.0
+    rt._ema.record(0, 5.0)                     # only exact measured
+    assert rt._retry_after() == pytest.approx(5.0)
+    rt._ema.record(3, 0.01)                    # cheaper tier measured
+    assert rt._retry_after() == pytest.approx(0.01)  # beats tier 0
+
+
+# -------------------------------------------- kcache observability (ISSUE 10)
+def test_runtime_enables_kcache_by_default(small_corpus, queries):
+    """Serving is where Zipfian reuse lives, so the runtime switches the
+    engine's cross-request cache on by default; stats and per-response
+    deltas expose it."""
+    index = build_index(small_corpus.docs, small_corpus.vecs)
+    eng = WmdEngine(index, lam=LAM, n_iter=N_ITER, impl="sparse")
+    assert eng.kcache_stats() is None
+    resps, rt = _serve(eng, [queries[0], queries[0]], _cfg(max_batch=2))
+    assert eng.kcache_stats() is not None      # enabled by the runtime
+    assert all(r.ok for r in resps)
+    for r in resps:
+        assert r.kcache is not None            # per-dispatch delta
+        assert set(r.kcache) == {"hits", "misses", "hit_rate"}
+        assert r.to_json()["kcache"] == r.kcache
+    stats = rt.stats()
+    assert stats["kcache"]["lookups"] > 0
+    assert "invalid_query" in stats
+
+
+def test_runtime_kcache_opt_out_and_respects_existing(small_corpus,
+                                                      queries):
+    index = build_index(small_corpus.docs, small_corpus.vecs)
+    eng = WmdEngine(index, lam=LAM, n_iter=N_ITER, impl="sparse")
+    _serve(eng, [queries[0]], _cfg(kcache_slots=0))
+    assert eng.kcache_stats() is None          # 0 disables the default
+    pre = WmdEngine(index, lam=LAM, n_iter=N_ITER, impl="sparse",
+                    kcache_slots=64)
+    cache_obj = pre._kcache
+    _serve(pre, [queries[0]], _cfg(kcache_slots=512))
+    assert pre._kcache is cache_obj            # existing cache kept
+    assert pre.kcache_stats()["slots"] == 64
+
+
 # ----------------------------------------------------- graceful shutdown
 def test_graceful_shutdown_drains_and_rejects(engine, queries):
     """``request_shutdown()`` (the SIGTERM/SIGINT path): already-admitted
